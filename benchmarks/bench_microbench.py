@@ -1,0 +1,37 @@
+"""Paper Fig. 1 — micro-benchmark: localised vs non-localised repetitive copy.
+
+1M-element array (paper size), 8 workers, growing repetition counts.
+`derived` = non-localised / localised wall-time ratio (the Fig-1 gap, which
+should grow with the number of repeated accesses).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import Homing, LocalisationPolicy
+from repro.core.microbench import make_microbench_fn
+from benchmarks.common import timeit
+
+N = 1_000_000
+
+
+def main():
+    mesh = (jax.make_mesh((len(jax.devices()),), ("data",))
+            if len(jax.devices()) > 1 else None)
+    loc = LocalisationPolicy(localised=True, static_mapping=True,
+                             homing=Homing.LOCAL_CHUNKED)
+    nonloc = LocalisationPolicy(localised=False, static_mapping=True,
+                                homing=Homing.HASH_INTERLEAVED)
+    print("name,us_per_call,derived")
+    for reps in (8, 32, 128):
+        x = jnp.arange(N, dtype=jnp.float32)
+        f_loc = make_microbench_fn(mesh, loc, reps)
+        f_non = make_microbench_fn(mesh, nonloc, reps)
+        t_loc = timeit(lambda: f_loc(jnp.arange(N, dtype=jnp.float32)))
+        t_non = timeit(lambda: f_non(jnp.arange(N, dtype=jnp.float32)))
+        print(f"microbench_localised_reps{reps},{t_loc:.0f},")
+        print(f"microbench_nonlocalised_reps{reps},{t_non:.0f},"
+              f"gap={t_non / max(t_loc, 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

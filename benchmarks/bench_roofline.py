@@ -1,0 +1,51 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction
+(= compute_term / max(term) — the fraction of the step the MXU would be busy
+with perfect overlap; 1.0 == compute-bound at peak).
+"""
+import glob
+import json
+import os
+
+OUTDIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def rows(outdir=OUTDIR, pattern="*.json"):
+    for f in sorted(glob.glob(os.path.join(outdir, pattern))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            yield {"arch": r.get("arch"), "shape": r.get("shape"),
+                   "mesh": "mp" if r.get("multi_pod") else "sp",
+                   "status": r.get("status", "?")}
+            continue
+        rf = r["roofline"]
+        mx = max(rf["compute_s"], rf["memory_s"], rf["collective_s"], 1e-30)
+        yield {
+            "arch": r["arch"], "shape": r["shape"],
+            "mesh": "mp" if r["multi_pod"] else "sp", "status": "ok",
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"], "dominant": rf["dominant"],
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "roofline_fraction": rf["compute_s"] / mx,
+            "hbm_gb_per_dev": r.get("per_device_hbm_bytes", 0) / 1e9,
+        }
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in rows():
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] != "ok":
+            print(f"{name},,{r['status']}")
+            continue
+        us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        print(f"{name},{us:.0f},"
+              f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+              f"useful={r['useful_flops_ratio']:.2f};"
+              f"hbm={r['hbm_gb_per_dev']:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Table 1 + Fig. 2 — merge sort speed-up ladder, Cases 1-8.
+
+`derived` = speed-up vs the Case-1-style single-worker baseline (paper's
+normalisation: 1 thread, default policy).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_sort import CASES
+from repro.core import Homing, LocalisationPolicy
+from repro.core.sort import make_sort_fn
+from repro.launch.hlo_cost import analyze
+from benchmarks.common import timeit
+
+N = 1 << 21   # 2M int32 (scaled from the paper's 100M for the CPU harness)
+
+
+def fresh():
+    return jax.random.randint(jax.random.key(0), (N,), 0, 1 << 30,
+                              dtype=jnp.int32)
+
+
+def _structure(fn):
+    """Per-device HLO facts: the hardware-independent Table-1 signal."""
+    compiled = fn.lower(fresh()).compile()
+    p = analyze(compiled.as_text())
+    return p["bytes"], p["collective_total"]
+
+
+def main():
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+    print("name,us_per_call,derived")
+    base_fn = make_sort_fn(mesh, LocalisationPolicy(False, False,
+                                                    Homing.HASH_INTERLEAVED),
+                           num_workers=1)
+    t_base = timeit(lambda: base_fn(fresh()))
+    print(f"sort_case0_1worker_baseline,{t_base:.0f},speedup=1.00")
+    for num, c in sorted(CASES.items()):
+        pol = LocalisationPolicy(localised=c.localised,
+                                 static_mapping=c.static_mapping,
+                                 homing=Homing(c.homing))
+        fn = make_sort_fn(mesh, pol, num_workers=n_dev if n_dev > 1 else 8)
+        t = timeit(lambda: fn(fresh()))
+        by, coll = _structure(fn)
+        print(f"sort_case{num}_{pol.name},{t:.0f},"
+              f"speedup={t_base / max(t, 1e-9):.2f};"
+              f"bytes/dev={by/1e6:.0f}MB;coll/dev={coll/1e6:.1f}MB")
+
+
+if __name__ == "__main__":
+    main()

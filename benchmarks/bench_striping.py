@@ -1,0 +1,45 @@
+"""Paper Fig. 4 — memory-striping analogue: source-width of the fetch phase.
+
+TILEPro64 striping spreads pages over 1-4 memory controllers. The pod
+analogue: the workers' chunk-fill (localise) pulls from an input striped
+over `width` source devices — width 1 is the single-controller hot spot,
+width 8 is fully striped. We time the reshard itself (the memory-fetch
+phase); the compute phase is locality-cached and unaffected, matching the
+paper's conclusion that striping is transparent once caching is on.
+"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks.common import timeit
+
+N = 1 << 22
+
+
+def main():
+    devs = jax.devices()
+    n_dev = len(devs)
+    print("name,us_per_call,derived")
+    if n_dev == 1:
+        print("striping_skipped,,single_device")
+        return
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    target = NamedSharding(mesh, P("data"))
+    for w in [w for w in (1, 2, 4, n_dev) if w <= n_dev]:
+        sub = jax.make_mesh((w,), ("data",), devices=devs[:w])
+        src = NamedSharding(sub, P("data"))
+
+        def make():
+            return jax.device_put(
+                jnp.arange(N, dtype=jnp.int32), src)
+
+        def fetch(x):
+            return jax.device_put(x, target)   # workers fill their chunks
+
+        x = make()
+        t = timeit(lambda: fetch(x), warmup=1, iters=3)
+        print(f"striping_width{w},{t:.0f},fetch_from_{w}_controllers")
+
+
+if __name__ == "__main__":
+    main()

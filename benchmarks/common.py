@@ -1,0 +1,33 @@
+"""Benchmark helpers: timing + subprocess-with-N-host-devices runner."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """Best-of-iters wall time in microseconds (jit-compatible)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run_with_devices(module: str, n_devices: int = 8, timeout: int = 1200):
+    """Run `python -m benchmarks.<module>` with N host devices; relay stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-m", f"benchmarks.{module}"],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    if r.returncode != 0:
+        print(f"# {module} FAILED:\n{r.stderr[-2000:]}", file=sys.stderr)
+    return r.stdout

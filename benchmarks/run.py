@@ -1,0 +1,38 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Distributed benchmarks run in
+subprocesses with 8 placeholder host devices (the main process keeps the
+single real device, mirroring the dry-run discipline).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import run_with_devices
+
+MULTIDEV = [
+    ("bench_microbench", "paper Fig 1: localised vs non-localised microbench"),
+    ("bench_sort_cases", "paper Table 1 + Fig 2: merge sort cases 1-8"),
+    ("bench_sort_sizes", "paper Fig 3: input-size sweep"),
+    ("bench_striping", "paper Fig 4: striping analogue"),
+]
+LOCAL = [
+    ("bench_kernels", "Pallas kernel localisation (Fig 1, TPU-native)"),
+    ("bench_roofline", "dry-run roofline table (EXPERIMENTS.md)"),
+]
+
+
+def main() -> None:
+    for mod, desc in MULTIDEV:
+        print(f"# === {mod}: {desc} ===", flush=True)
+        out = run_with_devices(mod, n_devices=8)
+        sys.stdout.write(out)
+        sys.stdout.flush()
+    for mod, desc in LOCAL:
+        print(f"# === {mod}: {desc} ===", flush=True)
+        m = __import__(f"benchmarks.{mod}", fromlist=["main"])
+        m.main()
+
+
+if __name__ == "__main__":
+    main()

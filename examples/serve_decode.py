@@ -1,0 +1,35 @@
+"""Serve a small LM with batched requests through the decode server.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import numpy as np
+
+import jax
+
+from repro.configs import get_config, reduce_config
+from repro.models.model import LM
+from repro.runtime.server import DecodeServer, Request
+
+
+def main():
+    cfg = reduce_config(get_config("granite-3-2b"), layers=4)
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    srv = DecodeServer(cfg, params, batch_slots=4, max_len=96)
+    rng = np.random.RandomState(0)
+    for rid in range(10):
+        plen = rng.randint(2, 9)
+        srv.submit(Request(rid=rid,
+                           prompt=rng.randint(0, cfg.vocab_size, plen)
+                           .astype(np.int32),
+                           max_new=8))
+    served = srv.run()
+    for r in served:
+        print(f"req {r.rid}: prompt_len={len(r.prompt)} -> tokens {r.out}")
+    assert all(r.done for r in served)
+    print(f"served {len(served)} requests in "
+          f"{-(-len(served) // srv.B)} waves of {srv.B} slots")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""granite-20b [dense] — llama-arch, code, MQA (kv=1). [arXiv:2405.04324; hf]"""
+from repro.configs.base import ArchConfig, ParallelConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite-20b",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    parallel=ParallelConfig(fsdp=True, microbatches=4),
+))

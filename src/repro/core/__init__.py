@@ -1,0 +1,17 @@
+"""The paper's primary contribution: cache/locality-aware placement.
+
+- `homing`       — layout policies (local homing vs hash-for-home)
+- `localisation` — Algorithm 1/2: chunk ownership, localise(), donation
+- `sort`         — distributed parallel merge sort (the validation app)
+- `microbench`   — the Fig-1 repetitive-copy micro-benchmark
+"""
+from repro.core.homing import Homing, to_layout, constrain, logical_view
+from repro.core.localisation import (LocalisationPolicy, chunk_bounds,
+                                     localise, place)
+from repro.core.sort import distributed_merge_sort, make_sort_fn, merge_sorted
+from repro.core.microbench import repetitive_copy, make_microbench_fn
+
+__all__ = ["Homing", "to_layout", "constrain", "logical_view",
+           "LocalisationPolicy", "chunk_bounds", "localise", "place",
+           "distributed_merge_sort", "make_sort_fn", "merge_sorted",
+           "repetitive_copy", "make_microbench_fn"]

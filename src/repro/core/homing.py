@@ -1,0 +1,67 @@
+"""Homing policies — the TPU adaptation of TILEPro64 cache homing.
+
+A *homing* is a layout rule that decides which device owns each element of a
+1-D array:
+
+  * LOCAL_CHUNKED  — element i lives on device i // (n/N) (the paper's
+                     "local homing": worker w's chunk is contiguous and
+                     entirely on w's device).
+  * HASH_INTERLEAVED — element i lives on device i mod N (the paper's
+                     "hash-for-home" at its finest granularity: any
+                     contiguous range a worker touches is spread across
+                     every device, so sequential access is always remote).
+
+The interleaved layout is expressed by viewing the array as (n/N, N) and
+sharding the *minor* axis — structurally identical to cache-line striping.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+class Homing(enum.Enum):
+    LOCAL_CHUNKED = "local"
+    HASH_INTERLEAVED = "hash"
+
+
+def chunked_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+    return NamedSharding(mesh, P(axis))
+
+
+def interleaved_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+    return NamedSharding(mesh, P(None, axis))
+
+
+def to_layout(x, mesh: Mesh, homing: Homing, axis: str = "data"):
+    """Place a 1-D array under the given homing (outside jit)."""
+    n = x.shape[0]
+    N = mesh.shape[axis]
+    assert n % N == 0, (n, N)
+    if homing == Homing.LOCAL_CHUNKED:
+        return jax.device_put(x, chunked_sharding(mesh, axis))
+    return jax.device_put(x.reshape(n // N, N), interleaved_sharding(mesh, axis))
+
+
+def logical_view(x_placed, homing: Homing):
+    """Recover the logical 1-D order from a placed array (lazy, inside jit)."""
+    if homing == Homing.LOCAL_CHUNKED:
+        return x_placed
+    return x_placed.reshape(-1)  # (n/N, N) row-major == logical order
+
+
+def constrain(x, mesh: Mesh, homing: Homing, axis: str = "data"):
+    """Sharding constraint form, for use inside jit."""
+    if mesh is None:
+        return x
+    if homing == Homing.LOCAL_CHUNKED:
+        return jax.lax.with_sharding_constraint(x, chunked_sharding(mesh, axis))
+    n = x.shape[0]
+    N = mesh.shape[axis]
+    y = x.reshape(n // N, N)
+    y = jax.lax.with_sharding_constraint(y, interleaved_sharding(mesh, axis))
+    return y.reshape(n)

@@ -1,0 +1,73 @@
+"""The paper's technique, generalised: Algorithm 1 for device meshes.
+
+  1. Divide the input array of size n into m = #devices chunks.     (bounds)
+  2. Assign each chunk to a worker by passing pointers.              (specs)
+  3. Map each worker to a core — STATIC.                             (mesh order)
+  4. Copy each part into a locally-homed buffer.                     (localise)
+  5. Free the dynamic memory as soon as possible.                    (donation)
+
+`localise` is the memcpy of Algorithm 2: a one-shot relayout into the
+chunk-contiguous ("locally homed") layout, done *before* repeated-access
+compute. Its cost is one all-to-all; it pays for itself once the data is
+touched more than ~once — exactly the paper's Fig 1 amortisation argument.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.homing import Homing, chunked_sharding, constrain
+
+
+def chunk_bounds(n: int, m: int) -> Tuple[Tuple[int, int], ...]:
+    """Ownership math: chunk w = [w*ceil(n/m), ...) clipped (paper step 1)."""
+    c = -(-n // m)
+    return tuple((min(w * c, n), min((w + 1) * c, n)) for w in range(m))
+
+
+@dataclass(frozen=True)
+class LocalisationPolicy:
+    """The three building blocks, as independently switchable knobs."""
+    localised: bool = True        # copy chunks into locally-homed buffers
+    static_mapping: bool = True   # explicit layouts vs compiler-chosen
+    homing: Homing = Homing.LOCAL_CHUNKED
+
+    @property
+    def name(self) -> str:
+        return (f"{'loc' if self.localised else 'nonloc'}-"
+                f"{'static' if self.static_mapping else 'auto'}-"
+                f"{self.homing.value}")
+
+
+def localise(x, mesh: Optional[Mesh], axis: str = "data"):
+    """One-shot reshard into the chunk-contiguous locally-homed layout."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, chunked_sharding(mesh, axis))
+
+
+def place(x, mesh: Optional[Mesh], policy: LocalisationPolicy,
+          axis: str = "data"):
+    """Layout an intermediate value according to the policy (inside jit).
+
+    - static+localised: chunk-contiguous (the technique).
+    - static+non-localised: pinned to the input's homing (repeated remote
+      access under hash-for-home — the conventional style on Tile Linux).
+    - non-static: no constraint; the compiler/runtime chooses (the
+      'leave it to the OS scheduler' baseline).
+    """
+    if mesh is None or not policy.static_mapping:
+        return x
+    if policy.localised:
+        return localise(x, mesh, axis)
+    return constrain(x, mesh, policy.homing, axis)
+
+
+def donate_buffers(fn):
+    """Paper step 5 ('free as soon as finished') == buffer donation."""
+    return jax.jit(fn, donate_argnums=(0,))

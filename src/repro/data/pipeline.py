@@ -1,0 +1,101 @@
+"""Synthetic LM data pipeline with *localised placement*.
+
+The pipeline is the data-path expression of the paper's technique: each
+device's batch chunk is generated directly on (for) that device via
+`make_array_from_callback` with the chunk-contiguous sharding — data is born
+locally homed, never resharded after the fact (Algorithm 1 steps 1-4 fused).
+
+Determinism: batch content is a pure function of (seed, step, element row),
+so a restart replays exactly the same batches — the property checkpoint
+resume and straggler/failure recovery rely on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _row_tokens(seed: int, step: int, row: int, seq_len: int,
+                vocab: int) -> np.ndarray:
+    """One deterministic 'document': a noisy arithmetic sequence (learnable)."""
+    rng = np.random.RandomState((seed * 1_000_003 + step * 7919 + row)
+                                % (2 ** 31 - 1))
+    start = rng.randint(0, vocab)
+    stride = rng.randint(1, 17)
+    toks = (start + stride * np.arange(seq_len + 1)) % vocab
+    noise = rng.rand(seq_len + 1) < 0.02
+    toks = np.where(noise, rng.randint(0, vocab, seq_len + 1), toks)
+    return toks.astype(np.int32)
+
+
+@dataclass
+class SyntheticLM:
+    cfg: ArchConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    mesh: Optional[Mesh] = None
+
+    def _sharding(self):
+        if self.mesh is None:
+            return None
+        dp = tuple(a for a in self.mesh.axis_names if a != "model")
+        return NamedSharding(self.mesh, P(dp, None))
+
+    def batch(self, step: int) -> dict:
+        B, S, V = self.global_batch, self.seq_len, self.cfg.vocab_size
+        sh = self._sharding()
+
+        def build(rows):
+            return np.stack([_row_tokens(self.seed, step, r, S, V)
+                             for r in rows])
+
+        if sh is None:
+            full = build(range(B))
+            toks, tgts = full[:, :-1], full[:, 1:]
+        else:
+            # localised placement: each device materialises only its chunk
+            def cb(index):
+                rows = range(*index[0].indices(B))
+                block = build(rows)
+                return block[:, :-1]
+
+            def cb_t(index):
+                rows = range(*index[0].indices(B))
+                return build(rows)[:, 1:]
+
+            toks = jax.make_array_from_callback((B, S), sh, cb)
+            tgts = jax.make_array_from_callback((B, S), sh, cb_t)
+        batch = {"targets": jnp.asarray(tgts)}
+        if self.cfg.embed_input:
+            batch["tokens"] = jnp.asarray(toks)
+        else:
+            # stub frontend: frame embeddings derived deterministically
+            t = np.asarray(toks)
+            emb = (np.sin(t[..., None] * (1.0 + np.arange(self.cfg.d_model)))
+                   / 8.0).astype(np.float32)
+            batch["embeds"] = jnp.asarray(emb)
+        if self.cfg.family == "vlm":
+            rng = np.random.RandomState(self.seed * 31 + step)
+            batch["image_embeds"] = jnp.asarray(
+                rng.randn(B, self.cfg.num_image_tokens,
+                          self.cfg.d_model).astype(np.float32) / 8.0)
+        return batch
+
+
+def make_batch_iterator(cfg, global_batch, seq_len, seed=0, mesh=None,
+                        start_step: int = 0) -> Iterator[dict]:
+    ds = SyntheticLM(cfg, global_batch, seq_len, seed, mesh)
+    step = start_step
+    while True:
+        yield ds.batch(step)
+        step += 1

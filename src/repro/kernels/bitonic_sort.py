@@ -1,0 +1,53 @@
+"""In-VMEM bitonic sort Pallas kernel — the local phase of distributed sort.
+
+One grid step sorts one chunk entirely in VMEM: the chunk is copied
+HBM->VMEM once (the paper's `input_cpy` memcpy, Algorithm 2), all
+O(L log^2 L) compare-exchange stages run on-chip, and the sorted run is
+written back once. Partner exchange is expressed with reshape+flip (no
+gathers), which maps onto TPU vector shuffles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_stages(v):
+    """Sort each row of v: (1, L) ascending. L must be a power of two."""
+    L = v.shape[-1]
+    assert L & (L - 1) == 0, f"bitonic length {L} not a power of 2"
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
+    k = 2
+    while k <= L:
+        j = k // 2
+        while j >= 1:
+            r = v.reshape(-1, 2, j)
+            partner = jnp.flip(r, axis=1).reshape(1, L)
+            asc = (idx & k) == 0 if k < L else jnp.ones((1, L), bool)
+            lower = (idx & j) == 0
+            mn = jnp.minimum(v, partner)
+            mx = jnp.maximum(v, partner)
+            v = jnp.where(lower == asc, mn, mx)
+            j //= 2
+        k *= 2
+    return v
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = _bitonic_stages(x_ref[...])
+
+
+def bitonic_sort(x, *, interpret: bool = True):
+    """Row-wise sort. x: (chunks, L), L a power of two; one chunk per grid step."""
+    chunks, L = x.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(chunks,),
+        in_specs=[pl.BlockSpec((1, L), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((chunks, L), x.dtype),
+        interpret=interpret,
+    )(x)

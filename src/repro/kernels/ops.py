@@ -1,0 +1,44 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+`interpret=True` (default on CPU) runs the kernel bodies in Python for
+correctness validation; on TPU pass interpret=False to lower for real.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitonic_sort as _bs
+from repro.kernels import flash_attention as _fa
+from repro.kernels import localised_copy as _lc
+from repro.core.sort import merge_sorted
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=True):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort(x, *, interpret=True):
+    return _bs.bitonic_sort(x, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def chunked_sort(x, *, interpret=True):
+    """Full 1-D sort: Pallas local sort per chunk + rank-merge tree."""
+    runs = bitonic_sort(x, interpret=interpret)
+    while runs.shape[0] > 1:
+        runs = jax.vmap(merge_sorted)(runs[0::2], runs[1::2])
+    return runs[0]
+
+
+@partial(jax.jit, static_argnames=("reps", "interpret"))
+def localised_copy(x, reps: int, *, interpret=True):
+    return _lc.localised_copy(x, reps, interpret=interpret)

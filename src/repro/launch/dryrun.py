@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any other import: jax locks the device count on first init.
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LM
+from repro.models.steps import (init_opt_state, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.optim import AdamW
+from repro.sharding.partition import (batch_specs, cache_specs, full_opt_specs,
+                                      make_plan, param_specs)
+
+# ---------------------------------------------------------------------------
+# hardware model (TPU v5e target)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # B/s per chip
+LINK_BW = 50e9            # B/s per ICI link
+
+
+from repro.launch.hlo_cost import analyze as hlo_analyze
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg, shape):
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"targets": sds((B, S), jnp.int32)}
+        if cfg.embed_input:
+            batch["tokens"] = sds((B, S), jnp.int32)
+        else:
+            batch["embeds"] = sds((B, S, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds((B, cfg.num_image_tokens, cfg.d_model), dt)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.embed_input:
+            batch["tokens"] = sds((B, S), jnp.int32)
+        else:
+            batch["embeds"] = sds((B, S, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds((B, cfg.num_image_tokens, cfg.d_model), dt)
+        return batch
+    # decode: one new token, KV cache of seq_len
+    batch = {}
+    if cfg.embed_input:
+        batch["tokens"] = sds((B, 1), jnp.int32)
+    else:
+        batch["embeds"] = sds((B, 1, cfg.d_model), dt)
+    return batch
+
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# one cell: lower + compile + analyse
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: str | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skipped",
+                "reason": "pure full-attention arch; long_500k needs "
+                          "sub-quadratic attention (DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = make_plan(mesh, cfg, shape)
+    model = LM(cfg)
+    params_struct = model.param_struct()
+    pspecs = param_specs(params_struct, plan, cfg)
+    bstruct = input_specs(cfg, shape)
+    bspecs = batch_specs(bstruct, plan)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt = AdamW(lr=3e-4)
+        opt_struct = jax.eval_shape(partial(init_opt_state, cfg, opt),
+                                    params_struct)
+        ospecs = full_opt_specs(opt_struct, params_struct, plan, cfg)
+        step = make_train_step(model, cfg, plan, opt)
+        jitted = jax.jit(step,
+                         in_shardings=(_named(pspecs, mesh),
+                                       _named(ospecs, mesh),
+                                       _named(bspecs, mesh)),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_struct, opt_struct, bstruct)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(model, cfg, plan)
+        jitted = jax.jit(step, in_shardings=(_named(pspecs, mesh),
+                                             _named(bspecs, mesh)))
+        lowered = jitted.lower(params_struct, bstruct)
+    else:  # decode
+        cache_struct = model.cache_struct(shape.global_batch, shape.seq_len)
+        cspecs = cache_specs(cache_struct, plan, cfg)
+        step = make_decode_step(model, cfg, plan)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        jitted = jax.jit(step,
+                         in_shardings=(_named(pspecs, mesh),
+                                       _named(cspecs, mesh),
+                                       _named(bspecs, mesh),
+                                       NamedSharding(mesh, P())),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_struct, cache_struct, bstruct, pos)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    n_chips = mesh.size
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    parsed = hlo_analyze(hlo)                      # trip-count-aware (hlo_cost)
+    flops_dev = float(parsed["flops"])
+    bytes_dev = float(parsed["bytes"])
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_info[attr] = int(v)
+    counts = cfg.param_counts()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                   (shape.seq_len if shape.kind == "prefill" else 1))
+    flops_mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops = flops_mult * counts["active"] * tokens
+
+    compute_term = flops_dev / PEAK_FLOPS
+    memory_term = bytes_dev / HBM_BW
+    coll_term = parsed["collective_total"] / LINK_BW
+    dominant = max([("compute", compute_term), ("memory", memory_term),
+                    ("collective", coll_term)], key=lambda kv: kv[1])[0]
+    per_dev_bytes = (mem_info.get("argument_size_in_bytes", 0)
+                     - mem_info.get("alias_size_in_bytes", 0)
+                     + mem_info.get("output_size_in_bytes", 0)
+                     + mem_info.get("temp_size_in_bytes", 0))
+    return {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": parsed["collective_total"],
+        "collective_detail": parsed["collective"],
+        "collective_counts": parsed["collective_counts"],
+        "top_bytes_ops": [f"{b:.3e} {k} {l}" for b, k, l in parsed["top_bytes"][:12]],
+        "top_flops_ops": [f"{b:.3e} {k} {l}" for b, k, l in parsed["top_flops"][:12]],
+        "xla_cost_analysis_raw": {"flops": float(cost.get("flops", 0.0)),
+                                  "bytes": float(cost.get("bytes accessed", 0.0))},
+        "while_trip_counts": parsed["while_trips"],
+        "memory_analysis": mem_info,
+        "per_device_hbm_bytes": per_dev_bytes,
+        "model_flops_global": model_flops,
+        "hlo_flops_global": flops_dev * n_chips,
+        "useful_flops_ratio": (model_flops / (flops_dev * n_chips)
+                               if flops_dev else 0.0),
+        "roofline": {
+            "compute_s": compute_term, "memory_s": memory_term,
+            "collective_s": coll_term, "dominant": dominant,
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+    try:
+        res = run_cell(args.arch, args.shape, args.multipod,
+                       save_hlo=args.save_hlo)
+    except Exception as e:  # noqa: BLE001 — sweep driver records failures
+        res = {"arch": args.arch, "shape": args.shape,
+               "multi_pod": args.multipod, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    js = json.dumps(res, indent=1, default=float)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+    print(js)
+    if res["status"] == "ok":
+        print(f"\n== memory analysis ==\n{res['memory_analysis']}")
+        print(f"== cost analysis ==\nflops/dev={res['flops_per_device']:.3e} "
+              f"bytes/dev={res['bytes_per_device']:.3e} "
+              f"coll/dev={res['collective_bytes_per_device']:.3e}")
+    sys.exit(0 if res["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

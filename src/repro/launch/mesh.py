@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. Device order is *static* — the paper's static
+thread->core mapping: chunk i of the data always lives on the same chip.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int | None = None, n_model: int = 1):
+    """Small mesh over whatever local devices exist (tests/benchmarks)."""
+    n = len(jax.devices())
+    n_data = n_data or (n // n_model)
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

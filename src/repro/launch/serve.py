@@ -1,0 +1,47 @@
+"""Serving launcher: batched decode server over a (restored) checkpoint.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+        [--ckpt DIR] [--requests 8] [--slots 4]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint import latest_step, restore
+from repro.configs import get_config, reduce_config
+from repro.models.model import LM
+from repro.runtime.server import DecodeServer, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch), layers=4)
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    if args.ckpt and latest_step(args.ckpt) is not None:
+        params = restore(args.ckpt, latest_step(args.ckpt),
+                         {"params": params})["params"]
+    srv = DecodeServer(cfg, params, batch_slots=args.slots, max_len=96)
+    rng = np.random.RandomState(0)
+    for rid in range(args.requests):
+        srv.submit(Request(rid=rid,
+                           prompt=rng.randint(0, cfg.vocab_size,
+                                              rng.randint(2, 9)).astype(np.int32),
+                           max_new=args.max_new))
+    for r in srv.run():
+        print(f"req {r.rid}: -> {r.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Dry-run sweep driver: every (arch x shape x mesh) cell in a subprocess.
+
+Each cell runs in its own process (the 512-device placeholder platform and
+XLA compile arenas die with it); existing JSONs are skipped so the sweep is
+restartable — the same discipline the trainer applies to checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCH_ORDER = ["qwen3-0.6b", "granite-3-2b", "musicgen-medium", "mamba2-2.7b",
+              "glm4-9b", "deepseek-moe-16b", "mixtral-8x7b", "granite-20b",
+              "llama-3.2-vision-90b", "jamba-1.5-large-398b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cell_path(outdir, arch, shape, mp):
+    return os.path.join(outdir, f"{arch}_{shape}_{'mp' if mp else 'sp'}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--archs", default=",".join(ARCH_ORDER))
+    ap.add_argument("--shapes", default=",".join(SHAPE_ORDER))
+    ap.add_argument("--meshes", default="sp,mp")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    cells = [(a, s, mp) for mp in [m == "mp" for m in args.meshes.split(",")]
+             for a in args.archs.split(",") for s in args.shapes.split(",")]
+    t00 = time.time()
+    for i, (arch, shape, mp) in enumerate(cells):
+        out = cell_path(args.outdir, arch, shape, mp)
+        if os.path.exists(out) and not args.force:
+            try:
+                st = json.load(open(out)).get("status")
+            except Exception:
+                st = "corrupt"
+            if st in ("ok", "skipped"):
+                print(f"[{i+1}/{len(cells)}] SKIP (exists, {st}) {out}",
+                      flush=True)
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--out", out]
+        if mp:
+            cmd.append("--multipod")
+        t0 = time.time()
+        print(f"[{i+1}/{len(cells)}] RUN {arch} {shape} "
+              f"{'mp' if mp else 'sp'} ...", flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env={**os.environ, "JAX_PLATFORMS": "cpu"})
+            status = "ok" if r.returncode == 0 else "FAIL"
+            tail = (r.stdout + r.stderr).strip().splitlines()[-1:] \
+                if status == "FAIL" else []
+        except subprocess.TimeoutExpired:
+            status, tail = "TIMEOUT", []
+            with open(out, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "timeout"}, f)
+        print(f"    -> {status} in {time.time()-t0:.0f}s "
+              f"(total {time.time()-t00:.0f}s) {' '.join(tail)[:300]}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Superblock assembly: heterogeneous layer stacks scanned over superblocks.
+
+A *superblock* is the smallest repeating unit of an architecture (1 layer for
+dense/MoE/SSM models; 8 layers for Jamba's 1:7 attn:mamba interleave; 5 for
+the vision model's 4-self+1-cross pattern). Parameters are stacked with a
+leading superblock axis and the stack is `lax.scan`ned — this keeps the HLO
+(and compile time) independent of depth and gives remat a natural boundary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import apply_attention, init_attention
+from repro.models.common import init_mlp, apply_mlp, rmsnorm
+from repro.models.mamba2 import apply_mamba, decode_mamba, init_mamba
+from repro.models.moe import apply_moe, init_moe
+from repro.sharding.partition import MeshPlan, ws
+
+
+@dataclass(frozen=True)
+class MemberSpec:
+    mixer: str  # "attn" | "mamba" | "cross"
+    ffn: str    # "mlp" | "moe" | "none"
+
+
+def superblock_spec(cfg: ArchConfig) -> List[MemberSpec]:
+    if cfg.family == "ssm":
+        return [MemberSpec("mamba", "none")]
+    if cfg.family == "hybrid":
+        out = []
+        for i in range(cfg.attn_every):
+            mixer = "attn" if i == 0 else "mamba"
+            ffn = "moe" if (cfg.is_moe and i % cfg.moe_every == 1) else "mlp"
+            out.append(MemberSpec(mixer, ffn))
+        return out
+    if cfg.family == "vlm":
+        n = cfg.cross_attn_every
+        return [MemberSpec("attn", "mlp")] * (n - 1) + [MemberSpec("cross", "mlp")]
+    ffn = "moe" if cfg.is_moe else "mlp"
+    return [MemberSpec("attn", ffn)]
+
+
+def num_superblocks(cfg: ArchConfig) -> int:
+    n = len(superblock_spec(cfg))
+    assert cfg.num_layers % n == 0, (cfg.num_layers, n)
+    return cfg.num_layers // n
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_member(key, cfg: ArchConfig, spec: MemberSpec):
+    k1, k2 = jax.random.split(key)
+    D = cfg.d_model
+    p = {"ln1": jnp.ones((D,), jnp.float32)}
+    if spec.mixer in ("attn", "cross"):
+        p["attn"] = init_attention(k1, cfg, cross=(spec.mixer == "cross"))
+    else:
+        p["mamba"] = init_mamba(k1, cfg)
+    if spec.ffn != "none":
+        p["ln2"] = jnp.ones((D,), jnp.float32)
+        p["moe" if spec.ffn == "moe" else "mlp"] = (
+            init_moe(k2, cfg) if spec.ffn == "moe" else init_mlp(k2, cfg))
+    return p
+
+
+def init_stack(key, cfg: ArchConfig):
+    members = superblock_spec(cfg)
+    nsb = num_superblocks(cfg)
+    keys = jax.random.split(key, nsb)
+
+    def init_sb(k):
+        ks = jax.random.split(k, len(members))
+        return {f"m{i}": _init_member(ks[i], cfg, m)
+                for i, m in enumerate(members)}
+
+    return jax.vmap(init_sb)(keys)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _apply_member(p, spec: MemberSpec, x, *, cfg, plan, positions,
+                  img_embeds=None, build_cache: bool, cache_len=None):
+    aux = jnp.float32(0.0)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "mamba":
+        mix, cache = apply_mamba(p["mamba"], h, cfg, plan)
+    else:
+        mix, cache = apply_attention(
+            p["attn"], h, cfg=cfg, plan=plan, positions=positions,
+            kv_src=img_embeds if spec.mixer == "cross" else None,
+            cross=(spec.mixer == "cross"), build_cache=build_cache,
+            cache_len=cache_len)
+    x = x + mix
+    if spec.ffn != "none":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            f, aux = apply_moe(p["moe"], h, cfg, plan)
+        else:
+            f = apply_mlp(p["mlp"], h, cfg, plan)
+        x = x + f
+    return x, cache, aux
+
+
+def apply_stack(stack, x, *, cfg: ArchConfig, plan: MeshPlan,
+                positions=None, img_embeds=None, build_cache: bool = False,
+                cache_len=None):
+    """x: (B,S,D) -> (y, caches_or_None, aux). Scan over superblocks."""
+    members = superblock_spec(cfg)
+    b_ax = plan.batch_axes if plan else None
+    s_ax = plan.seq_axis if plan else None
+
+    def body(carry, sb_params):
+        x = carry
+        caches, aux = {}, jnp.float32(0.0)
+        for i, m in enumerate(members):
+            x, c, a = _apply_member(sb_params[f"m{i}"], m, x, cfg=cfg,
+                                    plan=plan, positions=positions,
+                                    img_embeds=img_embeds,
+                                    build_cache=build_cache,
+                                    cache_len=cache_len)
+            aux += a
+            if build_cache:
+                caches[f"m{i}"] = c
+        x = ws(x, plan, b_ax, s_ax, None)
+        return x, (caches, aux)
+
+    if cfg.parallel.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (caches, auxs) = jax.lax.scan(body, x, stack)
+    return x, (caches if build_cache else None), jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, cache/state update)
+# ---------------------------------------------------------------------------
+def _decode_member(p, spec: MemberSpec, x, cache, pos, *, cfg, plan):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == "mamba":
+        mix, new_cache = decode_mamba(p["mamba"], h, cache, cfg, plan)
+    else:
+        mix, new_cache = apply_attention(
+            p["attn"], h, cfg=cfg, plan=plan, cache=cache, pos=pos,
+            cross=(spec.mixer == "cross"))
+    x = x + mix
+    if spec.ffn != "none":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            f, _ = apply_moe(p["moe"], h, cfg, plan, group_size=x.shape[0])
+        else:
+            f = apply_mlp(p["mlp"], h, cfg, plan)
+        x = x + f
+    return x, new_cache
+
+
+def decode_stack(stack, caches, x, pos, *, cfg: ArchConfig, plan: MeshPlan):
+    """x: (B,1,D); caches: pytree with leading superblock axis."""
+    members = superblock_spec(cfg)
+
+    def body(carry, xs):
+        x = carry
+        sb_params, sb_cache = xs
+        new_caches = {}
+        for i, m in enumerate(members):
+            x, c = _decode_member(sb_params[f"m{i}"], m, x, sb_cache[f"m{i}"],
+                                  pos, cfg=cfg, plan=plan)
+            new_caches[f"m{i}"] = c
+        return x, new_caches
+
+    x, new_caches = jax.lax.scan(body, x, (stack, caches))
+    return x, new_caches

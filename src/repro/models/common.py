@@ -1,0 +1,96 @@
+"""Shared model building blocks: init helpers, RMSNorm, RoPE, SwiGLU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdt(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def ninit(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps: float):
+    """RMSNorm in fp32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def gated_rmsnorm(x, gate, scale, eps: float):
+    """Mamba2-style: norm(x * silu(gate))."""
+    return rmsnorm(x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype),
+                   scale, eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float):
+    """Apply rotary embedding. x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))                 # (half,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    # broadcast over heads: (..., S, 1, half)
+    angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ArchConfig, d_ff: int | None = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    scale_out = 0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5) * 50  # mild depth scaling
+    return {
+        "w_gate": ninit(kg, (D, F), pdt(cfg)),
+        "w_up": ninit(ku, (D, F), pdt(cfg)),
+        "w_down": ninit(kd, (F, D), pdt(cfg), scale_out),
+    }
+
+
+def apply_mlp(p, x, cfg: ArchConfig, plan=None):
+    from repro.sharding.partition import ws
+    b = plan.batch_axes if plan else None
+    tpax = plan.tp if plan else None
+    g = x @ p["w_gate"].astype(x.dtype)
+    u = x @ p["w_up"].astype(x.dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = ws(h, plan, b, None, tpax)
+    return h @ p["w_down"].astype(x.dtype)
+
+
+def causal_conv1d(u, w, state=None):
+    """Depth-wise causal conv. u: (B, S, C); w: (K, C).
+
+    Returns (y, new_state) where state holds the trailing K-1 inputs.
+    """
+    K = w.shape[0]
+    if state is not None:
+        u_ext = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    else:
+        u_ext = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(u_ext[:, j:j + u.shape[1], :] * w[j].astype(u.dtype)
+            for j in range(K))
+    new_state = u_ext[:, -(K - 1):, :] if K > 1 else jnp.zeros_like(u[:, :0])
+    return y, new_state

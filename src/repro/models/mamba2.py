@@ -1,0 +1,155 @@
+"""Mamba2 SSD (state-space duality) block — chunked linear-time scan.
+
+The chunked SSD algorithm is itself the paper's localisation pattern applied
+to a recurrence: the sequence is cut into chunks of Q tokens, all heavy
+compute (the intra-chunk quadratic part) is *local to a chunk*, and only a
+small (H, P, N) state crosses chunk boundaries — exactly "copy your chunk,
+work locally, pass on a summary".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import causal_conv1d, gated_rmsnorm, ninit, pdt
+from repro.sharding.partition import MeshPlan, ws
+
+
+def init_mamba(key, cfg: ArchConfig):
+    D, di = cfg.d_model, cfg.d_inner
+    G, N, Hs, K = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_conv
+    kz, kx, kbc, kdt, kcx, kcb, ko = jax.random.split(key, 7)
+    return {
+        "wz": ninit(kz, (D, di), pdt(cfg)),
+        "wx": ninit(kx, (D, di), pdt(cfg)),
+        "wBC": ninit(kbc, (D, 2 * G * N), pdt(cfg)),
+        "wdt": ninit(kdt, (D, Hs), pdt(cfg)),
+        "conv_x": ninit(kcx, (K, di), pdt(cfg), 0.2),
+        "conv_bc": ninit(kcb, (K, 2 * G * N), pdt(cfg), 0.2),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, Hs, dtype=jnp.float32)),
+        "dt_bias": jnp.full((Hs,), -4.6, jnp.float32),
+        "D_skip": jnp.ones((Hs,), jnp.float32),
+        "ssm_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": ninit(ko, (di, D), pdt(cfg),
+                          0.02 / max(1.0, (2 * cfg.num_layers) ** 0.5) * 50),
+    }
+
+
+def _project(p, x, cfg: ArchConfig, conv_state=None):
+    """Shared projection + causal conv for both train and decode paths."""
+    z = x @ p["wz"].astype(x.dtype)
+    xin = x @ p["wx"].astype(x.dtype)
+    bc = x @ p["wBC"].astype(x.dtype)
+    dtr = x @ p["wdt"].astype(x.dtype)
+    cs_x = conv_state["conv_x"] if conv_state else None
+    cs_b = conv_state["conv_bc"] if conv_state else None
+    xin, ns_x = causal_conv1d(xin, p["conv_x"], cs_x)
+    bc, ns_b = causal_conv1d(bc, p["conv_bc"], cs_b)
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x.dtype)
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    B_, C_ = jnp.split(bc, 2, axis=-1)
+    B_ = B_.reshape(*B_.shape[:-1], G, N)
+    C_ = C_.reshape(*C_.shape[:-1], G, N)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    return z, xin, B_, C_, dt, {"conv_x": ns_x, "conv_bc": ns_b}
+
+
+def _expand_groups(t, Hs: int):
+    """(B, S, G, N) -> (B, S, Hs, N) by broadcasting heads within groups."""
+    B, S, G, N = t.shape
+    rep = Hs // G
+    return jnp.broadcast_to(t[:, :, :, None, :], (B, S, G, rep, N)).reshape(B, S, Hs, N)
+
+
+def apply_mamba(p, x, cfg: ArchConfig, plan: MeshPlan = None,
+                state=None, chunk: int = 256):
+    """Train/prefill path. x: (B, S, D) -> (y, final_state_dict)."""
+    Bb, S, D = x.shape
+    Hs, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    h_ax = plan.tp if (plan and plan.mesh is not None and Hs % plan.tp_size == 0) else None
+    b_ax = plan.batch_axes if plan else None
+
+    z, xin, B_, C_, dt, conv_state = _project(p, x, cfg)
+    Bh = _expand_groups(B_, Hs)
+    Ch = _expand_groups(C_, Hs)
+    xh = xin.reshape(Bb, S, Hs, P)
+    xh = ws(xh, plan, b_ax, None, h_ax, None)
+    A = -jnp.exp(p["A_log"])                                   # (Hs,)
+
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by ssd chunk {Q}"
+    Cn = S // Q
+    r = lambda t: t.reshape(Bb, Cn, Q, *t.shape[2:])
+    dtc, Bc, Cc, xc = r(dt), r(Bh), r(Ch), r(xh)
+    dA = dtc * A                                               # (B,Cn,Q,Hs) f32
+    cum = jnp.cumsum(dA, axis=2)
+
+    # ---- intra-chunk (local, quadratic-in-Q) ----
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,Cn,Q,Q,Hs)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    W = scores * L * dtc[:, :, None, :, :]                     # (B,Cn,Q,Q,Hs)
+    Ydiag = jnp.einsum("bcijh,bcjhp->bcihp", W.astype(x.dtype), xc,
+                       preferred_element_type=jnp.float32)
+
+    # ---- chunk summary states (B,Cn,Hs,P,N) ----
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,Cn,Q,Hs)
+    wgt = (decay_states * dtc).astype(x.dtype)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bc, wgt, xc,
+                        preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk recurrence (only the small state crosses chunks) ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,Cn,Hs)
+    s0 = (state["ssm"].astype(jnp.float32) if state is not None
+          else jnp.zeros((Bb, Hs, P, N), jnp.float32))
+
+    def scan_body(s, xs):
+        st_c, dec_c = xs
+        s_new = s * dec_c[:, :, None, None] + st_c
+        return s_new, s                                        # emit state *entering* chunk
+
+    final_state, prev_states = jax.lax.scan(
+        scan_body, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (B,Cn,Hs,P,N)
+
+    Yoff = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cc,
+                      prev_states.astype(x.dtype), jnp.exp(cum).astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+    Y = (Ydiag + Yoff).reshape(Bb, S, Hs, P)
+    Y = Y + (p["D_skip"][:, None] * xh.astype(jnp.float32))
+    y = Y.astype(x.dtype).reshape(Bb, S, cfg.d_inner)
+    y = gated_rmsnorm(y, z, p["ssm_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = {"ssm": final_state,
+                 "conv_x": conv_state["conv_x"].astype(x.dtype),
+                 "conv_bc": conv_state["conv_bc"].astype(x.dtype)}
+    return out, new_state
+
+
+def decode_mamba(p, x, state, cfg: ArchConfig, plan: MeshPlan = None):
+    """Single-token state update. x: (B, 1, D)."""
+    Bb = x.shape[0]
+    Hs, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    z, xin, B_, C_, dt, conv_state = _project(p, x, cfg, conv_state=state)
+    Bh = _expand_groups(B_, Hs)[:, 0]                          # (B,Hs,N)
+    Ch = _expand_groups(C_, Hs)[:, 0]
+    xh = xin.reshape(Bb, Hs, P)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0] * A)                                 # (B,Hs)
+    s = state["ssm"].astype(jnp.float32)
+    upd = jnp.einsum("bhn,bh,bhp->bhpn", Bh.astype(jnp.float32), dt[:, 0],
+                     xh.astype(jnp.float32))
+    s_new = s * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), s_new)
+    y = y + p["D_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.astype(x.dtype).reshape(Bb, 1, cfg.d_inner)
+    y = gated_rmsnorm(y, z, p["ssm_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = {"ssm": s_new, "conv_x": conv_state["conv_x"],
+                 "conv_bc": conv_state["conv_bc"]}
+    return out, new_state

@@ -1,0 +1,122 @@
+"""LM: embedding/frontend + superblock stack + head; train/prefill/decode."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+from repro.models.common import ninit, pdt, rmsnorm
+from repro.sharding.partition import MeshPlan, NULL_PLAN, ws
+
+
+class LM:
+    """A decoder-only LM over tokens or precomputed frontend embeddings."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        cfg = self.cfg
+        ke, kh, ks = jax.random.split(key, 3)
+        params = {"stack": blocks.init_stack(ks, cfg),
+                  "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+                  "head": {"head_w": ninit(kh, (cfg.d_model, cfg.vocab_padded),
+                                           pdt(cfg))}}
+        if cfg.embed_input:
+            params["embed"] = {"tok_embed": ninit(ke, (cfg.vocab_padded,
+                                                       cfg.d_model), pdt(cfg))}
+        return params
+
+    def param_struct(self):
+        """Shape-only parameter pytree (no allocation)."""
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # ----------------------------------------------------------------- embed
+    def _embed(self, params, batch, plan):
+        cfg = self.cfg
+        if cfg.embed_input:
+            x = jnp.take(params["embed"]["tok_embed"], batch["tokens"], axis=0)
+            x = x.astype(jnp.dtype(cfg.dtype))
+        else:
+            x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        b_ax = plan.batch_axes if plan else None
+        s_ax = plan.seq_axis if plan else None
+        return ws(x, plan, b_ax, s_ax, None)
+
+    def _head(self, params, x, plan):
+        cfg = self.cfg
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["head"]["head_w"].astype(x.dtype)
+        b_ax = plan.batch_axes if plan else None
+        return ws(logits, plan, b_ax, None, plan.tp if plan else None)
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch, plan: MeshPlan = NULL_PLAN,
+                build_cache: bool = False, cache_len=None):
+        """Returns (logits (B,S,Vp), caches_or_None, aux)."""
+        cfg = self.cfg
+        x = self._embed(params, batch, plan)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        x, caches, aux = blocks.apply_stack(
+            params["stack"], x, cfg=cfg, plan=plan, positions=positions,
+            img_embeds=batch.get("image_embeds"), build_cache=build_cache,
+            cache_len=cache_len)
+        return self._head(params, x, plan), caches, aux
+
+    def prefill(self, params, batch, plan: MeshPlan = NULL_PLAN,
+                max_len=None):
+        logits, caches, _ = self.forward(params, batch, plan,
+                                         build_cache=True, cache_len=max_len)
+        return logits[:, -1], caches
+
+    def decode_step(self, params, caches, batch, pos, plan: MeshPlan = NULL_PLAN):
+        """One token for the whole batch at scalar position `pos`."""
+        cfg = self.cfg
+        if cfg.embed_input:
+            x = jnp.take(params["embed"]["tok_embed"], batch["tokens"], axis=0)
+            x = x.astype(jnp.dtype(cfg.dtype))
+        else:
+            x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        x, new_caches = blocks.decode_stack(params["stack"], caches, x, pos,
+                                            cfg=cfg, plan=plan)
+        logits = self._head(params, x, plan)
+        return logits[:, 0], new_caches
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch_size: int, max_len: int, img_len: int = 0):
+        """Zero-initialised decode cache (same structure prefill builds)."""
+        cfg = self.cfg
+        members = blocks.superblock_spec(cfg)
+        nsb = blocks.num_superblocks(cfg)
+        dtype = jnp.dtype(cfg.dtype)
+        Sc = min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+        KV, hd = cfg.num_kv_heads, cfg.head_dim
+
+        def member_cache(spec):
+            if spec.mixer == "mamba":
+                return {
+                    "ssm": jnp.zeros((nsb, batch_size, cfg.ssm_nheads,
+                                      cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+                    "conv_x": jnp.zeros((nsb, batch_size, cfg.ssm_conv - 1,
+                                         cfg.d_inner), dtype),
+                    "conv_bc": jnp.zeros((nsb, batch_size, cfg.ssm_conv - 1,
+                                          2 * cfg.ssm_ngroups * cfg.ssm_state), dtype),
+                }
+            if spec.mixer == "cross":
+                n = img_len or cfg.num_image_tokens
+                return {"k": jnp.zeros((nsb, batch_size, n, KV, hd), dtype),
+                        "v": jnp.zeros((nsb, batch_size, n, KV, hd), dtype),
+                        "kpos": jnp.zeros((nsb, n), jnp.int32)}
+            return {"k": jnp.zeros((nsb, batch_size, Sc, KV, hd), dtype),
+                    "v": jnp.zeros((nsb, batch_size, Sc, KV, hd), dtype),
+                    "kpos": jnp.full((nsb, Sc), -1, jnp.int32)}
+
+        return {f"m{i}": member_cache(m) for i, m in enumerate(members)}
+
+    def cache_struct(self, batch_size: int, max_len: int, img_len: int = 0):
+        return jax.eval_shape(lambda: self.init_cache(batch_size, max_len, img_len))

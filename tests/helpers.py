@@ -1,0 +1,36 @@
+"""Shared test helpers: tiny batches for every arch family."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.models.model import LM
+
+ALL_ARCHS = ["mixtral-8x7b", "deepseek-moe-16b", "qwen3-0.6b", "glm4-9b",
+             "granite-20b", "granite-3-2b", "musicgen-medium", "mamba2-2.7b",
+             "jamba-1.5-large-398b", "llama-3.2-vision-90b"]
+
+
+def tiny(name, **kw):
+    return reduce_config(get_config(name), **kw)
+
+
+def make_batch(cfg, B=2, S=32, key=0, with_targets=True):
+    ks = jax.random.split(jax.random.key(key), 4)
+    batch = {}
+    if cfg.embed_input:
+        batch["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    else:
+        batch["embeds"] = 0.1 * jax.random.normal(ks[0], (B, S, cfg.d_model))
+    if with_targets:
+        batch["targets"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = 0.1 * jax.random.normal(
+            ks[2], (B, cfg.num_image_tokens, cfg.d_model))
+    return batch
+
+
+def build(name, **kw):
+    cfg = tiny(name, **kw)
+    model = LM(cfg)
+    params = model.init(jax.random.key(42))
+    return cfg, model, params
