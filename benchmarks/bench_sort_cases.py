@@ -2,13 +2,22 @@
 
 `derived` = speed-up vs the Case-1-style single-worker baseline (paper's
 normalisation: 1 thread, default policy).
+
+``--backend constraint`` (default) measures the `with_sharding_constraint`
+hint tree; ``--backend shard_map`` measures the explicit execution engine
+(`repro.core.engine`); ``--backend both`` prints the grid for each.
+``--local-sort`` picks the engine's per-device leaf sort: ``jnp`` (default
+here — the Pallas kernel only *interprets* on CPU, drowning the collective
+signal) or ``bitonic`` (the VMEM-resident kernel, the TPU configuration).
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_sort import CASES
 from repro.core import Homing, LocalisationPolicy
-from repro.core.sort import make_sort_fn
+from repro.core.sort import BACKENDS, make_sort_fn
 from repro.launch.hlo_cost import analyze
 from benchmarks.common import timeit
 
@@ -27,25 +36,42 @@ def _structure(fn):
     return p["bytes"], p["collective_total"]
 
 
-def main():
+def run_grid(mesh, n_dev: int, backend: str, local_sort, t_base: float):
+    for num, c in sorted(CASES.items()):
+        pol = LocalisationPolicy(localised=c.localised,
+                                 static_mapping=c.static_mapping,
+                                 homing=Homing(c.homing))
+        fn = make_sort_fn(mesh, pol, num_workers=n_dev if n_dev > 1 else 8,
+                          local_sort=local_sort, backend=backend)
+        t = timeit(lambda: fn(fresh()))
+        by, coll = _structure(fn)
+        print(f"sort_{backend}_case{num}_{pol.name},{t:.0f},"
+              f"speedup={t_base / max(t, 1e-9):.2f};"
+              f"bytes/dev={by/1e6:.0f}MB;coll/dev={coll/1e6:.1f}MB")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=BACKENDS + ("both",),
+                    default="constraint")
+    ap.add_argument("--local-sort", choices=("jnp", "bitonic"), default="jnp",
+                    help="engine leaf sort (bitonic = Pallas kernel)")
+    args = ap.parse_args(argv)
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+    local_sort = jnp.sort if args.local_sort == "jnp" else "bitonic"
     print("name,us_per_call,derived")
+    # the paper's normalisation: 1 worker, default policy — one shared
+    # baseline (the engine is per-device, so it has no 1-worker mode)
     base_fn = make_sort_fn(mesh, LocalisationPolicy(False, False,
                                                     Homing.HASH_INTERLEAVED),
                            num_workers=1)
     t_base = timeit(lambda: base_fn(fresh()))
     print(f"sort_case0_1worker_baseline,{t_base:.0f},speedup=1.00")
-    for num, c in sorted(CASES.items()):
-        pol = LocalisationPolicy(localised=c.localised,
-                                 static_mapping=c.static_mapping,
-                                 homing=Homing(c.homing))
-        fn = make_sort_fn(mesh, pol, num_workers=n_dev if n_dev > 1 else 8)
-        t = timeit(lambda: fn(fresh()))
-        by, coll = _structure(fn)
-        print(f"sort_case{num}_{pol.name},{t:.0f},"
-              f"speedup={t_base / max(t, 1e-9):.2f};"
-              f"bytes/dev={by/1e6:.0f}MB;coll/dev={coll/1e6:.1f}MB")
+    backends = BACKENDS if args.backend == "both" else (args.backend,)
+    for backend in backends:
+        run_grid(mesh, n_dev, backend,
+                 local_sort if backend == "shard_map" else None, t_base)
 
 
 if __name__ == "__main__":

@@ -2,12 +2,15 @@
 
 Cases 8 (fully localised, local homing) vs 3 (non-localised, hash) vs 7
 (localised under hash): the localisation gap should grow with input size.
+``--backend`` selects the constraint-hint tree or the shard_map engine.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import Homing, LocalisationPolicy
-from repro.core.sort import make_sort_fn
+from repro.core.sort import BACKENDS, make_sort_fn
 from benchmarks.common import timeit
 
 CASES = {
@@ -18,22 +21,26 @@ CASES = {
 }
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=BACKENDS, default="constraint")
+    args = ap.parse_args(argv)
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+    # engine on CPU: jnp leaf sort (the Pallas kernel only interprets here)
+    local_sort = jnp.sort if args.backend == "shard_map" else None
     print("name,us_per_call,derived")
     for logn in (18, 20, 22):
         n = 1 << logn
         times = {}
         for name, pol in CASES.items():
-            fn = make_sort_fn(mesh, pol, num_workers=n_dev if n_dev > 1 else 8)
-            x = jax.random.randint(jax.random.key(1), (n,), 0, 1 << 30,
-                                   dtype=jnp.int32)
+            fn = make_sort_fn(mesh, pol, num_workers=n_dev if n_dev > 1 else 8,
+                              local_sort=local_sort, backend=args.backend)
             times[name] = timeit(lambda: fn(jax.random.randint(
                 jax.random.key(1), (n,), 0, 1 << 30, dtype=jnp.int32)))
-            print(f"sort_n{n}_{name},{times[name]:.0f},")
+            print(f"sort_{args.backend}_n{n}_{name},{times[name]:.0f},")
         gap = times["case3_nonloc_hash"] / max(times["case8_loc_local"], 1e-9)
-        print(f"sort_n{n}_fig3_gap,,case3/case8={gap:.2f}x")
+        print(f"sort_{args.backend}_n{n}_fig3_gap,,case3/case8={gap:.2f}x")
 
 
 if __name__ == "__main__":

@@ -3,15 +3,20 @@
 - `homing`       — layout policies (local homing vs hash-for-home)
 - `localisation` — Algorithm 1/2: chunk ownership, localise(), donation
 - `sort`         — distributed parallel merge sort (the validation app)
+- `engine`       — the explicit shard_map execution backend (Algorithms 1-3)
 - `microbench`   — the Fig-1 repetitive-copy micro-benchmark
 """
 from repro.core.homing import Homing, to_layout, constrain, logical_view
 from repro.core.localisation import (LocalisationPolicy, chunk_bounds,
                                      localise, place)
-from repro.core.sort import distributed_merge_sort, make_sort_fn, merge_sorted
+from repro.core.sort import (BACKENDS, distributed_merge_sort, make_sort_fn,
+                             merge_sorted, pad_to_multiple, pad_value)
+from repro.core.engine import make_engine_fn, shard_map_sort
 from repro.core.microbench import repetitive_copy, make_microbench_fn
 
 __all__ = ["Homing", "to_layout", "constrain", "logical_view",
            "LocalisationPolicy", "chunk_bounds", "localise", "place",
-           "distributed_merge_sort", "make_sort_fn", "merge_sorted",
+           "BACKENDS", "distributed_merge_sort", "make_sort_fn",
+           "merge_sorted", "pad_to_multiple", "pad_value",
+           "make_engine_fn", "shard_map_sort",
            "repetitive_copy", "make_microbench_fn"]

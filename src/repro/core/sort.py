@@ -29,6 +29,37 @@ from repro.core.localisation import LocalisationPolicy
 BIG = {jnp.dtype("int32"): jnp.iinfo(jnp.int32).max,
        jnp.dtype("float32"): jnp.inf}
 
+BACKENDS = ("constraint", "shard_map")
+
+
+def pad_value(dtype):
+    """Sort-neutral sentinel: sorts after every real element of `dtype`."""
+    dt = jnp.dtype(dtype)
+    if dt in BIG:
+        return BIG[dt]
+    if jnp.issubdtype(dt, jnp.floating):
+        return jnp.inf
+    return jnp.iinfo(dt).max
+
+
+def pad_to_multiple(x, m: int):
+    """Pad a 1-D array with BIG sentinels up to the next multiple of m.
+
+    Sentinels sort after (or tie with) every real element, so after sorting
+    the original multiset occupies the first `len(x)` slots — the caller
+    strips them with `out[:len(x)]`.
+
+    Float inputs must be NaN-free when padding occurs: NaN sorts after the
+    inf sentinel, so the tail strip would keep a sentinel and silently drop
+    the NaN (the searchsorted rank merge is NaN-unsound anyway).
+    """
+    n = x.shape[0]
+    n_pad = (-n) % m
+    if n_pad == 0:
+        return x
+    fill = jnp.full((n_pad,), pad_value(x.dtype), x.dtype)
+    return jnp.concatenate([x, fill])
+
 
 def merge_sorted(a, b):
     """Merge two sorted 1-D arrays (stable, duplicate-safe rank merge)."""
@@ -74,24 +105,46 @@ def distributed_merge_sort(x, mesh: Optional[Mesh] = None,
                            policy: LocalisationPolicy = LocalisationPolicy(),
                            num_workers: Optional[int] = None,
                            local_sort: Callable = jnp.sort):
-    """Sort a 1-D array with an m-worker merge tree (m = #devices default)."""
+    """Sort a 1-D array with an m-worker merge tree (m = #devices default).
+
+    Arbitrary lengths are supported: the input is padded with BIG sentinels
+    up to the next multiple of m and the padding is stripped after the tree.
+    Float inputs must be NaN-free (see `pad_to_multiple`).
+    """
     n = x.shape[0]
     m = num_workers or (mesh.shape["data"] if mesh is not None else 8)
-    assert n % m == 0 and (m & (m - 1)) == 0, (n, m)
+    assert (m & (m - 1)) == 0, m
 
-    runs = x.reshape(m, n // m)
+    x = pad_to_multiple(x, m)
+    runs = x.reshape(m, x.shape[0] // m)
     runs = _constrain_runs(runs, mesh, policy)
     runs = local_sort(runs, axis=-1)                 # leaves of the tree
     runs = _constrain_runs(runs, mesh, policy)
     while runs.shape[0] > 1:
         merged = _merge_rows(runs[0::2], runs[1::2])
         runs = _constrain_runs(merged, mesh, policy)
-    return runs[0]
+    return runs[0][:n]
 
 
 def make_sort_fn(mesh, policy: LocalisationPolicy, num_workers=None,
-                 local_sort=jnp.sort):
-    """Jitted sort for one Table-1 case; input buffer donated (step 5)."""
+                 local_sort=None, backend: str = "constraint"):
+    """Jitted sort for one Table-1 case; input buffer donated (step 5).
+
+    backend="constraint": the original `with_sharding_constraint`-hint tree —
+    layout is *suggested* and the XLA SPMD partitioner picks the collectives.
+    backend="shard_map": the explicit per-device execution engine
+    (`repro.core.engine`) — ownership, local Pallas sort and inter-device
+    exchange are spelled out literally (paper Algorithms 1-3).
+
+    `local_sort=None` picks the backend default (jnp.sort for the hint
+    backend, the Pallas bitonic kernel for the engine).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
+    if backend == "shard_map":
+        from repro.core.engine import make_engine_fn   # local: avoid cycle
+        return make_engine_fn(mesh, policy, num_workers=num_workers,
+                              local_sort=local_sort or "bitonic")
     fn = partial(distributed_merge_sort, mesh=mesh, policy=policy,
-                 num_workers=num_workers, local_sort=local_sort)
+                 num_workers=num_workers, local_sort=local_sort or jnp.sort)
     return jax.jit(fn, donate_argnums=(0,))

@@ -125,19 +125,21 @@ def _dot_flops(op: Op, comp: "Computation") -> float:
         n_out *= d
     m = _LHS_CDIMS.search(op.line)
     cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
-    # lhs operand: inline shape if printed, else resolve via symbol table
+    # lhs operand: inline shape if printed, else resolve via symbol table.
+    # The operand list itself contains commas (inside shapes), so cut at the
+    # closing paren of dot(...) rather than splitting on ",".
     rhs_part = op.line.split("dot(", 1)[1] if "dot(" in op.line else ""
+    rhs_part = rhs_part.split(")", 1)[0]
     lhs_dims = None
-    first_operand = rhs_part.split(",")[0].strip() if rhs_part else ""
-    inline = _SHAPE_RE.findall(first_operand)
-    if inline:
-        lhs_dims = [int(x) for x in inline[0][1].split(",") if x]
-    else:
-        om = _OPERAND_RE.search(first_operand)
-        if om and om.group(1) in comp.shapes:
-            sh = _parse_shape(comp.shapes[om.group(1)])
-            if sh:
-                lhs_dims = sh[0][1]
+    inline = _SHAPE_RE.search(rhs_part)
+    om = _OPERAND_RE.search(rhs_part)
+    if inline and (om is None or inline.start() < om.start()):
+        # 'dot(f32[16,16]{1,0} %Arg_0.1, ...)': inline type precedes the name
+        lhs_dims = [int(x) for x in inline.group(2).split(",") if x]
+    elif om and om.group(1) in comp.shapes:
+        sh = _parse_shape(comp.shapes[om.group(1)])
+        if sh:
+            lhs_dims = sh[0][1]
     k = 1
     if lhs_dims and cdims:
         for c in cdims:

@@ -1,0 +1,109 @@
+"""Deterministic fallback for `hypothesis` in offline images.
+
+The CI image cannot pip-install anything, so the property tests degrade to a
+fixed, seeded example sweep when the real package is missing.  Import as:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+Only the surface these tests use is provided: `given`, `settings`
+(max_examples / deadline), and `strategies.integers / lists / sampled_from`.
+Each strategy draws from a `random.Random` seeded per test function, with the
+first two examples pinned to the strategy's boundary values so edge cases
+(empty lists, INT_MIN/INT_MAX) are always exercised.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class _Strategy:
+    def example(self, rng: random.Random, index: int):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2 ** 63) if min_value is None else min_value
+        self.hi = 2 ** 63 - 1 if max_value is None else max_value
+
+    def example(self, rng, index):
+        if index == 0:
+            return self.lo
+        if index == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements: _Strategy, min_size=0, max_size=None):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 32
+
+    def example(self, rng, index):
+        if index == 0:
+            size = self.min_size
+        elif index == 1:
+            size = self.max_size
+        else:
+            # coarse size grid: random *values* but few distinct shapes, so
+            # jax tests don't recompile on every example
+            size = rng.choice((self.min_size,
+                               (self.min_size + self.max_size) // 2,
+                               self.max_size))
+        return [self.elements.example(rng, 2) for _ in range(size)]
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def example(self, rng, index):
+        if index < len(self.options):
+            return self.options[index]
+        return rng.choice(self.options)
+
+
+class strategies:
+    """Namespace mirroring `hypothesis.strategies` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def lists(elements, *, min_size=0, max_size=None):
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._compat_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # otherwise the strategy parameters look like missing fixtures.
+        def wrapper():
+            n = getattr(fn, "_compat_settings", {}).get("max_examples", 10)
+            # seeded per test name: stable across runs and machines
+            rng = random.Random(zlib.adler32(fn.__name__.encode()))
+            for i in range(n):
+                fn(*(s.example(rng, i) for s in strats))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_compat_shim = True
+        return wrapper
+    return deco

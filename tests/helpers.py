@@ -1,6 +1,7 @@
 """Shared test helpers: tiny batches for every arch family."""
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import get_config, reduce_config
 from repro.models.model import LM
@@ -8,6 +9,12 @@ from repro.models.model import LM
 ALL_ARCHS = ["mixtral-8x7b", "deepseek-moe-16b", "qwen3-0.6b", "glm4-9b",
              "granite-20b", "granite-3-2b", "musicgen-medium", "mamba2-2.7b",
              "jamba-1.5-large-398b", "llama-3.2-vision-90b"]
+
+# the fast lane (-m "not slow") keeps one representative arch;
+# the full per-arch sweep still runs in tier-1 (plain `pytest`)
+FAST_ARCHS = {"qwen3-0.6b"}
+ARCH_PARAMS = [pytest.param(n, marks=() if n in FAST_ARCHS
+                            else (pytest.mark.slow,)) for n in ALL_ARCHS]
 
 
 def tiny(name, **kw):

@@ -1,6 +1,7 @@
 """hlo_cost: the trip-count-aware HLO cost model vs analytic ground truth."""
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.launch.hlo_cost import analyze, parse_module
 
@@ -23,7 +24,8 @@ def test_scan_flops_multiplied_by_trip_count():
     assert r["flops"] == 10 * 2 * 64 ** 3, r["flops"]
     assert 10 in r["while_trips"]
     # XLA's own cost_analysis undercounts loop bodies (the motivation)
-    xla = jax.jit(scanned).lower(W, x).compile().cost_analysis()["flops"]
+    ca = jax.jit(scanned).lower(W, x).compile().cost_analysis()
+    xla = (ca[0] if isinstance(ca, (list, tuple)) else ca)["flops"]
     assert xla < r["flops"]
 
 
@@ -42,6 +44,7 @@ def test_grad_of_scan_counts_fwd_and_bwd():
     assert r["flops"] == 7 * 3 * 2 * 32 ** 3, r["flops"]
 
 
+@pytest.mark.slow
 def test_collectives_inside_loops_are_scaled():
     import os
     import subprocess

@@ -14,10 +14,10 @@ from repro.models.steps import (init_opt_state, make_loss_fn, make_train_step)
 from repro.optim.adamw import AdamW
 from repro.sharding.partition import NULL_PLAN
 
-from helpers import ALL_ARCHS, build, make_batch
+from helpers import ALL_ARCHS, ARCH_PARAMS, build, make_batch
 
 
-@pytest.mark.parametrize("name", ALL_ARCHS)
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_smoke_forward_shapes_no_nans(name):
     cfg, model, params = build(name)
     B, S = 2, 32
@@ -28,7 +28,7 @@ def test_smoke_forward_shapes_no_nans(name):
     assert bool(jnp.isfinite(aux))
 
 
-@pytest.mark.parametrize("name", ALL_ARCHS)
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_smoke_train_step(name):
     cfg, model, params = build(name)
     batch = make_batch(cfg, 2, 32)
@@ -44,6 +44,7 @@ def test_smoke_train_step(name):
     assert delta > 0
 
 
+@pytest.mark.slow
 def test_train_loss_decreases_dense():
     cfg, model, params = build("qwen3-0.6b")
     batch = make_batch(cfg, 2, 32)
@@ -57,7 +58,7 @@ def test_train_loss_decreases_dense():
     assert losses[-1] < losses[0] - 0.5, losses
 
 
-@pytest.mark.parametrize("name", ALL_ARCHS)
+@pytest.mark.parametrize("name", ARCH_PARAMS)
 def test_decode_parity_with_forward(name):
     """Prefill t0 tokens, decode the rest: logits must match full forward."""
     cfg, model, params = build(name)
@@ -105,6 +106,7 @@ def test_moe_active_params_below_total():
         assert c["active"] < 0.6 * c["total"], (n, c)
 
 
+@pytest.mark.slow
 def test_banded_swa_matches_chunked():
     """Banded O(S*W) SWA == generic chunked attention (mixtral iter1)."""
     import jax

@@ -45,6 +45,7 @@ def _run_train(tmp, steps, metrics=None, timeout=600, total=None):
                               os.path.abspath(__file__))))
 
 
+@pytest.mark.slow
 def test_trainer_runs_and_loss_decreases(tmp_path):
     m = str(tmp_path / "metrics.json")
     r = _run_train(tmp_path / "ck", 30, m)
@@ -53,6 +54,7 @@ def test_trainer_runs_and_loss_decreases(tmp_path):
     assert log[-1]["loss"] < log[0]["loss"], log
 
 
+@pytest.mark.slow
 def test_resume_is_deterministic(tmp_path):
     """30 straight steps == 15 steps + restart + 15 more (same final loss)."""
     m1 = str(tmp_path / "m1.json")
@@ -69,6 +71,7 @@ def test_resume_is_deterministic(tmp_path):
     np.testing.assert_allclose(loss_straight, loss_resumed, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_supervisor_relaunches_after_crash(tmp_path):
     """First attempt dies mid-run; supervisor relaunches; run completes."""
     from repro.runtime.ft import Supervisor
@@ -97,6 +100,7 @@ def test_supervisor_relaunches_after_crash(tmp_path):
     assert any("FINAL" in l for l in out["stdout"])
 
 
+@pytest.mark.slow
 def test_decode_server_greedy_matches_manual(tmp_path):
     cfg, model, params = build("qwen3-0.6b")
     srv = DecodeServer(cfg, params, batch_slots=2, max_len=64)

@@ -64,6 +64,7 @@ print("ALL_EQ_OK")
 """
 
 
+@pytest.mark.slow
 def test_sharded_train_matches_single_device():
     r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
                        text=True, env={**os.environ, "PYTHONPATH": "src"},
