@@ -2,32 +2,36 @@
 
 1M-element array (paper size), 8 workers, growing repetition counts.
 `derived` = non-localised / localised wall-time ratio (the Fig-1 gap, which
-should grow with the number of repeated accesses).
+should grow with the number of repeated accesses).  Both variants are built
+with ``Locale.workload("microbench", reps=R)``.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import Homing, LocalisationPolicy
-from repro.core.microbench import make_microbench_fn
+from repro.core import Homing, Locale, LocalisationPolicy
 from benchmarks.common import timeit
 
-N = 1_000_000
 
-
-def main():
-    mesh = (jax.make_mesh((len(jax.devices()),), ("data",))
-            if len(jax.devices()) > 1 else None)
-    loc = LocalisationPolicy(localised=True, static_mapping=True,
-                             homing=Homing.LOCAL_CHUNKED)
-    nonloc = LocalisationPolicy(localised=False, static_mapping=True,
-                                homing=Homing.HASH_INTERLEAVED)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1_000_000)
+    ap.add_argument("--reps", type=lambda s: [int(v) for v in s.split(",")],
+                    default=[8, 32, 128], help="comma list of pass counts")
+    args = ap.parse_args(argv)
+    n = args.n
+    locale = Locale.auto()
+    loc = locale.with_policy(LocalisationPolicy(
+        localised=True, static_mapping=True, homing=Homing.LOCAL_CHUNKED))
+    nonloc = locale.with_policy(LocalisationPolicy(
+        localised=False, static_mapping=True, homing=Homing.HASH_INTERLEAVED))
     print("name,us_per_call,derived")
-    for reps in (8, 32, 128):
-        x = jnp.arange(N, dtype=jnp.float32)
-        f_loc = make_microbench_fn(mesh, loc, reps)
-        f_non = make_microbench_fn(mesh, nonloc, reps)
-        t_loc = timeit(lambda: f_loc(jnp.arange(N, dtype=jnp.float32)))
-        t_non = timeit(lambda: f_non(jnp.arange(N, dtype=jnp.float32)))
+    for reps in args.reps:
+        f_loc = loc.workload("microbench", reps=reps)
+        f_non = nonloc.workload("microbench", reps=reps)
+        t_loc = timeit(lambda: f_loc(jnp.arange(n, dtype=jnp.float32)))
+        t_non = timeit(lambda: f_non(jnp.arange(n, dtype=jnp.float32)))
         print(f"microbench_localised_reps{reps},{t_loc:.0f},")
         print(f"microbench_nonlocalised_reps{reps},{t_non:.0f},"
               f"gap={t_non / max(t_loc, 1e-9):.2f}x")

@@ -9,6 +9,10 @@ hint tree; ``--backend shard_map`` measures the explicit execution engine
 ``--local-sort`` picks the engine's per-device leaf sort: ``jnp`` (default
 here — the Pallas kernel only *interprets* on CPU, drowning the collective
 signal) or ``bitonic`` (the VMEM-resident kernel, the TPU configuration).
+``--logn`` scales the input (smoke runs use a small one).
+
+All placement goes through `Locale`: one locale per Table-1 case, the sort
+built with ``locale.workload("sort", backend=...)``.
 """
 import argparse
 
@@ -16,36 +20,37 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_sort import CASES
-from repro.core import Homing, LocalisationPolicy
-from repro.core.sort import BACKENDS, make_sort_fn
+from repro.core import BACKENDS, Homing, Locale, LocalisationPolicy
 from repro.launch.hlo_cost import analyze
 from benchmarks.common import timeit
 
-N = 1 << 21   # 2M int32 (scaled from the paper's 100M for the CPU harness)
 
-
-def fresh():
-    return jax.random.randint(jax.random.key(0), (N,), 0, 1 << 30,
+def fresh(n):
+    return jax.random.randint(jax.random.key(0), (n,), 0, 1 << 30,
                               dtype=jnp.int32)
 
 
-def _structure(fn):
+def _structure(fn, n):
     """Per-device HLO facts: the hardware-independent Table-1 signal."""
-    compiled = fn.lower(fresh()).compile()
+    compiled = fn.lower(fresh(n)).compile()
     p = analyze(compiled.as_text())
     return p["bytes"], p["collective_total"]
 
 
-def run_grid(mesh, n_dev: int, backend: str, local_sort, t_base: float):
+def run_grid(locale, n_dev: int, backend: str, local_sort, t_base: float,
+             n: int, cases=None):
     for num, c in sorted(CASES.items()):
+        if cases and num not in cases:
+            continue
         pol = LocalisationPolicy(localised=c.localised,
                                  static_mapping=c.static_mapping,
                                  homing=Homing(c.homing))
-        fn = make_sort_fn(mesh, pol, num_workers=n_dev if n_dev > 1 else 8,
-                          local_sort=local_sort, backend=backend)
-        t = timeit(lambda: fn(fresh()))
-        by, coll = _structure(fn)
-        print(f"sort_{backend}_case{num}_{pol.name},{t:.0f},"
+        fn = locale.with_policy(pol).workload(
+            "sort", backend=backend, local_sort=local_sort,
+            num_workers=n_dev if n_dev > 1 else 8)
+        t = timeit(lambda: fn(fresh(n)))
+        by, coll = _structure(fn, n)
+        print(f"sort_{backend}_n{n}_case{num}_{pol.name},{t:.0f},"
               f"speedup={t_base / max(t, 1e-9):.2f};"
               f"bytes/dev={by/1e6:.0f}MB;coll/dev={coll/1e6:.1f}MB")
 
@@ -56,22 +61,29 @@ def main(argv=None):
                     default="constraint")
     ap.add_argument("--local-sort", choices=("jnp", "bitonic"), default="jnp",
                     help="engine leaf sort (bitonic = Pallas kernel)")
+    ap.add_argument("--logn", type=int, default=21,
+                    help="log2 input size (2M int32 default, scaled from the "
+                         "paper's 100M for the CPU harness)")
+    ap.add_argument("--cases", type=lambda s: {int(c) for c in s.split(",")},
+                    default=None, help="comma list of Table-1 cases to run")
     args = ap.parse_args(argv)
+    n = 1 << args.logn
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+    locale = Locale.auto()
     local_sort = jnp.sort if args.local_sort == "jnp" else "bitonic"
     print("name,us_per_call,derived")
     # the paper's normalisation: 1 worker, default policy — one shared
     # baseline (the engine is per-device, so it has no 1-worker mode)
-    base_fn = make_sort_fn(mesh, LocalisationPolicy(False, False,
-                                                    Homing.HASH_INTERLEAVED),
-                           num_workers=1)
-    t_base = timeit(lambda: base_fn(fresh()))
-    print(f"sort_case0_1worker_baseline,{t_base:.0f},speedup=1.00")
+    base_fn = locale.with_policy(
+        LocalisationPolicy(False, False, Homing.HASH_INTERLEAVED)).workload(
+            "sort", num_workers=1)
+    t_base = timeit(lambda: base_fn(fresh(n)))
+    print(f"sort_n{n}_case0_1worker_baseline,{t_base:.0f},speedup=1.00")
     backends = BACKENDS if args.backend == "both" else (args.backend,)
     for backend in backends:
-        run_grid(mesh, n_dev, backend,
-                 local_sort if backend == "shard_map" else None, t_base)
+        run_grid(locale, n_dev, backend,
+                 local_sort if backend == "shard_map" else None, t_base,
+                 n, args.cases)
 
 
 if __name__ == "__main__":

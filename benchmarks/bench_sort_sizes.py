@@ -2,15 +2,15 @@
 
 Cases 8 (fully localised, local homing) vs 3 (non-localised, hash) vs 7
 (localised under hash): the localisation gap should grow with input size.
-``--backend`` selects the constraint-hint tree or the shard_map engine.
+``--backend`` selects the constraint-hint tree or the shard_map engine;
+``--logns`` the size sweep. Placement goes through `Locale`.
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import Homing, LocalisationPolicy
-from repro.core.sort import BACKENDS, make_sort_fn
+from repro.core import BACKENDS, Homing, Locale, LocalisationPolicy
 from benchmarks.common import timeit
 
 CASES = {
@@ -24,18 +24,21 @@ CASES = {
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=BACKENDS, default="constraint")
+    ap.add_argument("--logns", type=lambda s: [int(v) for v in s.split(",")],
+                    default=[18, 20, 22], help="comma list of log2 sizes")
     args = ap.parse_args(argv)
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+    locale = Locale.auto()
     # engine on CPU: jnp leaf sort (the Pallas kernel only interprets here)
     local_sort = jnp.sort if args.backend == "shard_map" else None
     print("name,us_per_call,derived")
-    for logn in (18, 20, 22):
+    for logn in args.logns:
         n = 1 << logn
         times = {}
         for name, pol in CASES.items():
-            fn = make_sort_fn(mesh, pol, num_workers=n_dev if n_dev > 1 else 8,
-                              local_sort=local_sort, backend=args.backend)
+            fn = locale.with_policy(pol).workload(
+                "sort", backend=args.backend, local_sort=local_sort,
+                num_workers=n_dev if n_dev > 1 else 8)
             times[name] = timeit(lambda: fn(jax.random.randint(
                 jax.random.key(1), (n,), 0, 1 << 30, dtype=jnp.int32)))
             print(f"sort_{args.backend}_n{n}_{name},{times[name]:.0f},")

@@ -6,35 +6,40 @@ over `width` source devices — width 1 is the single-controller hot spot,
 width 8 is fully striped. We time the reshard itself (the memory-fetch
 phase); the compute phase is locality-cached and unaffected, matching the
 paper's conclusion that striping is transparent once caching is on.
+
+Both the striped source and the chunk-fill target are `Locale`s: the fetch
+is literally `target_locale.put(...)`.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import Locale
 from benchmarks.common import timeit
 
-N = 1 << 22
 
-
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--logn", type=int, default=22)
+    args = ap.parse_args(argv)
+    n = 1 << args.logn
     devs = jax.devices()
     n_dev = len(devs)
     print("name,us_per_call,derived")
     if n_dev == 1:
         print("striping_skipped,,single_device")
         return
-    mesh = jax.make_mesh((n_dev,), ("data",))
-    target = NamedSharding(mesh, P("data"))
-    for w in [w for w in (1, 2, 4, n_dev) if w <= n_dev]:
-        sub = jax.make_mesh((w,), ("data",), devices=devs[:w])
-        src = NamedSharding(sub, P("data"))
+    target = Locale.auto()
+    for w in dict.fromkeys(w for w in (1, 2, 4, n_dev) if w <= n_dev):
+        src = Locale.auto(devices=devs[:w])
 
         def make():
-            return jax.device_put(
-                jnp.arange(N, dtype=jnp.int32), src)
+            placed = src.put(jnp.arange(n, dtype=jnp.int32))
+            return placed.data
 
         def fetch(x):
-            return jax.device_put(x, target)   # workers fill their chunks
+            return target.put(x).data   # workers fill their chunks
 
         x = make()
         t = timeit(lambda: fetch(x), warmup=1, iters=3)

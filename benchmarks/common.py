@@ -20,12 +20,14 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3):
     return best * 1e6
 
 
-def run_with_devices(module: str, n_devices: int = 8, timeout: int = 1200):
+def run_with_devices(module: str, n_devices: int = 8, timeout: int = 1200,
+                     args=()):
     """Run `python -m benchmarks.<module>` with N host devices; relay stdout."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
-    r = subprocess.run([sys.executable, "-m", f"benchmarks.{module}"],
+    r = subprocess.run([sys.executable, "-m", f"benchmarks.{module}",
+                        *args],
                        capture_output=True, text=True, timeout=timeout,
                        env=env)
     if r.returncode != 0:

@@ -1,11 +1,21 @@
 """Benchmark harness — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Distributed benchmarks run in
-subprocesses with 8 placeholder host devices (the main process keeps the
-single real device, mirroring the dry-run discipline).
+Prints ``name,us_per_call,derived`` CSV and writes machine-readable
+``BENCH_sort.json`` / ``BENCH_microbench.json`` (one record per case:
+name, n, median wall-clock in us, backend, derived) so the perf trajectory
+is tracked across PRs. Distributed benchmarks run in subprocesses with 8
+placeholder host devices (the main process keeps the single real device,
+mirroring the dry-run discipline).
+
+``--smoke`` runs every entry point at toy sizes on 2 placeholder devices —
+fast enough for the test suite, so the benchmark surface can't silently rot.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import re
 import sys
 
 from benchmarks.common import run_with_devices
@@ -21,17 +31,84 @@ LOCAL = [
     ("bench_roofline", "dry-run roofline table (EXPERIMENTS.md)"),
 ]
 
+# per-module argv for --smoke: toy sizes, a case subset, short sweeps
+SMOKE_ARGS = {
+    "bench_microbench": ["--n", "4096", "--reps", "2"],
+    "bench_sort_cases": ["--logn", "12", "--cases", "3,8"],
+    "bench_sort_sizes": ["--logns", "12"],
+    "bench_striping": ["--logn", "14"],
+}
 
-def main() -> None:
+# json targets: which CSV prefixes land in which BENCH_*.json
+JSON_FILES = {
+    "BENCH_sort.json": ("sort_",),
+    "BENCH_microbench.json": ("microbench_",),
+}
+
+
+def parse_records(csv_text: str):
+    """CSV ``name,us_per_call,derived`` rows -> dict records.
+
+    `backend` and `n` are recovered from the benchmark's name convention
+    (``sort_<backend>_case<k>_...``, ``sort_<backend>_n<n>_...``); rows
+    without a wall-clock (structure-only lines) keep ``us=None``.
+    """
+    records = []
+    for line in csv_text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#") or line.startswith("name,"):
+            continue
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            continue
+        name, us = parts[0], parts[1]
+        derived = parts[2] if len(parts) > 2 else ""
+        m_backend = re.match(r"sort_(constraint|shard_map)_", name)
+        m_n = re.search(r"_n(\d+)_", name)
+        records.append({
+            "name": name,
+            "n": int(m_n.group(1)) if m_n else None,
+            "us": float(us) if us else None,
+            "backend": m_backend.group(1) if m_backend else None,
+            "derived": derived,
+        })
+    return records
+
+
+def write_json(records, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for fname, prefixes in JSON_FILES.items():
+        rows = [r for r in records if r["name"].startswith(prefixes)]
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {path} ({len(rows)} records)", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes / 2 devices: exercise every entry point")
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_*.json")
+    ap.add_argument("--skip-local", action="store_true",
+                    help="skip the single-process (non-mesh) benches")
+    args = ap.parse_args(argv)
+    n_devices = 2 if args.smoke else 8
+    records = []
     for mod, desc in MULTIDEV:
         print(f"# === {mod}: {desc} ===", flush=True)
-        out = run_with_devices(mod, n_devices=8)
+        extra = SMOKE_ARGS.get(mod, []) if args.smoke else []
+        out = run_with_devices(mod, n_devices=n_devices, args=extra)
         sys.stdout.write(out)
         sys.stdout.flush()
-    for mod, desc in LOCAL:
-        print(f"# === {mod}: {desc} ===", flush=True)
-        m = __import__(f"benchmarks.{mod}", fromlist=["main"])
-        m.main()
+        records += parse_records(out)
+    if not args.skip_local:
+        for mod, desc in LOCAL:
+            print(f"# === {mod}: {desc} ===", flush=True)
+            m = __import__(f"benchmarks.{mod}", fromlist=["main"])
+            m.main()
+    write_json(records, args.out)
 
 
 if __name__ == "__main__":

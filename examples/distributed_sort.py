@@ -7,6 +7,9 @@ execution backends:
     bitonic kernel as the local sort (interpret mode on CPU), and explicit
     ppermute / all_gather / all_to_all exchanges per `LocalisationPolicy`.
 
+Every case is one `Locale` (same mesh + axis, different policy) and the
+sort comes from ``locale.workload("sort", backend=...)``.
+
 Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/distributed_sort.py
 """
@@ -16,14 +19,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_sort import CASES
-from repro.core import Homing, LocalisationPolicy
-from repro.core.sort import BACKENDS, make_sort_fn
+from repro.core import BACKENDS, Homing, Locale, LocalisationPolicy
 from repro.kernels import ops
 
 
 def main():
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
+    locale = Locale.auto()
     n = 1 << 18
     for backend in BACKENDS:
         # the engine's Pallas leaf sort only interprets on CPU — keep the
@@ -33,8 +35,9 @@ def main():
             pol = LocalisationPolicy(localised=c.localised,
                                      static_mapping=c.static_mapping,
                                      homing=Homing(c.homing))
-            fn = make_sort_fn(mesh, pol, num_workers=max(n_dev, 8),
-                              local_sort=local_sort, backend=backend)
+            fn = locale.with_policy(pol).workload(
+                "sort", backend=backend, local_sort=local_sort,
+                num_workers=max(n_dev, 8))
             x = jax.random.randint(jax.random.key(0), (n,), 0, 1 << 30,
                                    jnp.int32)
             t0 = time.perf_counter()
@@ -48,7 +51,7 @@ def main():
     # kernel running inside each shard (VMEM-resident sort, Algorithm 2)
     x = jax.random.randint(jax.random.key(1), (1 << 12,), 0, 1 << 30,
                            dtype=jnp.int32)
-    fn = make_sort_fn(mesh, LocalisationPolicy(), backend="shard_map")
+    fn = locale.workload("engine")
     y = jax.block_until_ready(fn(x))
     assert bool(jnp.all(y[1:] >= y[:-1]))
     print("shard_map engine + pallas bitonic local sort: ok (interpret mode)")

@@ -1,4 +1,4 @@
-"""Quickstart: the paper's technique in 30 lines.
+"""Quickstart: the paper's technique through the `Locale` API.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 (For a real multi-worker demo: XLA_FLAGS=--xla_force_host_platform_device_count=8)
@@ -6,28 +6,33 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Homing, LocalisationPolicy, distributed_merge_sort,
-                        repetitive_copy)
+from repro.core import Homing, Locale, LocalisationPolicy
 
-mesh = (jax.make_mesh((len(jax.devices()),), ("data",))
-        if len(jax.devices()) > 1 else None)
+# One object carries the whole placement decision: (mesh, axis, policy).
+locale = Locale.auto()                                        # all devices
 
 # --- the paper's Table-1 extremes ---
-localised = LocalisationPolicy(localised=True, static_mapping=True,
-                               homing=Homing.LOCAL_CHUNKED)      # Case 8
-conventional = LocalisationPolicy(localised=False, static_mapping=True,
-                                  homing=Homing.HASH_INTERLEAVED)  # Case 3
+localised = locale.with_policy(LocalisationPolicy(
+    localised=True, static_mapping=True, homing=Homing.LOCAL_CHUNKED))  # Case 8
+conventional = locale.with_policy(LocalisationPolicy(
+    localised=False, static_mapping=True, homing=Homing.HASH_INTERLEAVED))  # Case 3
 
 x = jax.random.randint(jax.random.key(0), (1 << 18,), 0, 1 << 30, jnp.int32)
-for name, pol in [("localised(case8)", localised),
+for name, loc in [("localised(case8)", localised),
                   ("conventional(case3)", conventional)]:
-    y = distributed_merge_sort(x, mesh=mesh, policy=pol)
+    sort = loc.workload("sort")          # jitted, input donated (step 5)
+    y = sort(jnp.array(x))
     ok = bool(jnp.all(y[1:] >= y[:-1]))
     print(f"sort {name:22s} sorted={ok}")
 
+# --- placement primitives: data carries its homing ---
+homed = conventional.put(jnp.arange(1 << 16, dtype=jnp.float32))  # born hashed
+print(f"homed: shape={homed.shape} homing={homed.homing.value} "
+      f"logical[:3]={homed.logical()[:3].tolist()}")
+
 # --- Fig-1 micro-benchmark semantics ---
-xf = jnp.linspace(0, 1, 1 << 16)
-for name, pol in [("localised", localised), ("hash-for-home", conventional)]:
-    out = repetitive_copy(xf, 16, mesh, pol)
+for name, loc in [("localised", localised), ("hash-for-home", conventional)]:
+    bench = loc.workload("microbench", reps=16)
+    out = bench(jnp.linspace(0, 1, 1 << 16))
     print(f"microbench {name:14s} checksum={float(out.sum()):.2f}")
 print("ok")

@@ -1,22 +1,73 @@
 """The paper's primary contribution: cache/locality-aware placement.
 
-- `homing`       — layout policies (local homing vs hash-for-home)
-- `localisation` — Algorithm 1/2: chunk ownership, localise(), donation
+Public surface (`repro.core.api`):
+
+- `Locale`  — (mesh, axis, policy) as one object: `put`, `pin`, `localise`,
+              `pin_tree`, `jit`, `make`, and the `workload(...)` factory.
+- `Homed`   — an array carrying its homing as pytree metadata; `.logical()`
+              recovers logical order, mixed homings are tree-structure errors.
+
+Building blocks (still first-class):
+
+- `homing`       — layout mechanics (local homing vs hash-for-home)
+- `localisation` — Algorithm 1/2: `LocalisationPolicy`, `chunk_bounds`
 - `sort`         — distributed parallel merge sort (the validation app)
 - `engine`       — the explicit shard_map execution backend (Algorithms 1-3)
 - `microbench`   — the Fig-1 repetitive-copy micro-benchmark
-"""
-from repro.core.homing import Homing, to_layout, constrain, logical_view
-from repro.core.localisation import (LocalisationPolicy, chunk_bounds,
-                                     localise, place)
-from repro.core.sort import (BACKENDS, distributed_merge_sort, make_sort_fn,
-                             merge_sorted, pad_to_multiple, pad_value)
-from repro.core.engine import make_engine_fn, shard_map_sort
-from repro.core.microbench import repetitive_copy, make_microbench_fn
 
-__all__ = ["Homing", "to_layout", "constrain", "logical_view",
-           "LocalisationPolicy", "chunk_bounds", "localise", "place",
-           "BACKENDS", "distributed_merge_sort", "make_sort_fn",
-           "merge_sorted", "pad_to_multiple", "pad_value",
-           "make_engine_fn", "shard_map_sort",
-           "repetitive_copy", "make_microbench_fn"]
+The pre-`Locale` free functions (`to_layout`, `constrain`, `logical_view`,
+`localise`, `place`) and per-workload factories (`make_sort_fn`,
+`make_engine_fn`, `make_microbench_fn`) remain importable from here as thin
+deprecation shims only.
+"""
+import warnings as _warnings
+
+from repro.core import engine as _engine
+from repro.core import homing as _homing
+from repro.core import localisation as _localisation
+from repro.core import microbench as _microbench
+from repro.core import sort as _sort
+from repro.core.api import Homed, Locale, register_workload
+from repro.core.homing import Homing, check_divisible
+from repro.core.localisation import LocalisationPolicy, chunk_bounds
+from repro.core.sort import (BACKENDS, distributed_merge_sort, merge_sorted,
+                             pad_to_multiple, pad_value)
+from repro.core.engine import shard_map_sort
+from repro.core.microbench import repetitive_copy
+
+
+def _deprecated(name: str, fn, repl: str):
+    def shim(*args, **kw):
+        _warnings.warn(
+            f"repro.core.{name} is deprecated; use {repl} (repro.core.api)",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kw)
+    shim.__name__ = name
+    shim.__qualname__ = name
+    shim.__doc__ = f"Deprecated shim for {repl}.\n\n{fn.__doc__ or ''}"
+    return shim
+
+
+to_layout = _deprecated("to_layout", _homing.to_layout, "Locale.put")
+constrain = _deprecated("constrain", _homing.constrain, "Locale.pin")
+logical_view = _deprecated("logical_view", _homing.logical_view,
+                           "Homed.logical")
+localise = _deprecated("localise", _localisation.localise, "Locale.localise")
+place = _deprecated("place", _localisation.place, "Locale.pin")
+make_sort_fn = _deprecated("make_sort_fn", _sort.make_sort_fn,
+                           'Locale.workload("sort", backend=...)')
+make_engine_fn = _deprecated("make_engine_fn", _engine.make_engine_fn,
+                             'Locale.workload("sort", backend="shard_map")')
+make_microbench_fn = _deprecated("make_microbench_fn",
+                                 _microbench.make_microbench_fn,
+                                 'Locale.workload("microbench", reps=...)')
+
+__all__ = ["Locale", "Homed", "register_workload",
+           "Homing", "check_divisible",
+           "LocalisationPolicy", "chunk_bounds",
+           "BACKENDS", "distributed_merge_sort", "merge_sorted",
+           "pad_to_multiple", "pad_value",
+           "shard_map_sort", "repetitive_copy",
+           # deprecated shims
+           "to_layout", "constrain", "logical_view", "localise", "place",
+           "make_sort_fn", "make_engine_fn", "make_microbench_fn"]

@@ -82,13 +82,13 @@ def _leaf_sort(rows, local_sort: LocalSort, interpret: bool):
 
 def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
                      hash_homed: bool, local_sort: LocalSort,
-                     interpret: bool):
+                     interpret: bool, axis: str = AXIS):
     """Per-device body, localised: one-shot relayout + ppermute tree."""
     if hash_homed:
         # Algorithm 2's memcpy: one explicit all-to-all turns my interleaved
         # column into my contiguous chunk (order scrambled; the sort fixes it).
         blocks = xloc.reshape(m, chunk // m)     # block j goes to device j
-        mine = jax.lax.all_to_all(blocks, AXIS, 0, 0).reshape(-1)
+        mine = jax.lax.all_to_all(blocks, axis, 0, 0).reshape(-1)
     else:
         mine = xloc                       # already the locally-homed chunk
     runs = _leaf_sort(mine.reshape(w_per_dev, chunk // w_per_dev),
@@ -103,13 +103,13 @@ def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
     # materialises more than 2 chunks — and the sorted array ends naturally
     # distributed in ownership order (compare-exchange -> merge-split block
     # sorting is exact by the 0-1 principle, given sorted blocks).
-    d = jax.lax.axis_index(AXIS)
+    d = jax.lax.axis_index(axis)
     p = m.bit_length() - 1
     for i in range(p):
         for j in range(i, -1, -1):
             stride = 1 << j
             perm = [(a, a ^ stride) for a in range(m)]
-            other = jax.lax.ppermute(run, AXIS, perm)
+            other = jax.lax.ppermute(run, axis, perm)
             both = merge_sorted(run, other)          # (2*chunk,)
             ascending = ((d >> (i + 1)) & 1) == 0
             is_low = ((d >> j) & 1) == 0
@@ -120,7 +120,7 @@ def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
 
 def _unlocalised_shard(xloc, *, m: int, chunk: int, w: int,
                        hash_homed: bool, local_sort: LocalSort,
-                       interpret: bool):
+                       interpret: bool, axis: str = AXIS):
     """Per-device body, non-localised: runs stay home-pinned between levels.
 
     Every level gathers the whole array (each worker's reads are remote —
@@ -129,11 +129,11 @@ def _unlocalised_shard(xloc, *, m: int, chunk: int, w: int,
     merge work is replicated across devices: without ownership there is no
     cheap way to partition it, which is the paper's point.
     """
-    d = jax.lax.axis_index(AXIS)
+    d = jax.lax.axis_index(axis)
 
     if hash_homed:
         def gather(col):                          # (chunk, 1) -> (n_p,)
-            full = jax.lax.all_gather(col, AXIS, axis=1, tiled=True)
+            full = jax.lax.all_gather(col, axis, axis=1, tiled=True)
             return full.reshape(-1)
 
         def scatter(full):                        # (n_p,) -> (chunk, 1)
@@ -141,7 +141,7 @@ def _unlocalised_shard(xloc, *, m: int, chunk: int, w: int,
                 full.reshape(chunk, m), (0, d), (chunk, 1))
     else:
         def gather(blk):                          # (chunk,) -> (n_p,)
-            return jax.lax.all_gather(blk, AXIS, axis=0, tiled=True)
+            return jax.lax.all_gather(blk, axis, axis=0, tiled=True)
 
         def scatter(full):                        # (n_p,) -> (chunk,)
             return jax.lax.dynamic_slice(full, (d * chunk,), (chunk,))
@@ -162,10 +162,10 @@ def shard_map_sort(x, mesh: Mesh,
                    policy: LocalisationPolicy = LocalisationPolicy(),
                    num_workers: Optional[int] = None,
                    local_sort: LocalSort = "bitonic",
-                   interpret: bool = True):
+                   interpret: bool = True, axis: str = AXIS):
     """Sort a 1-D array with the explicit shard_map engine (traceable)."""
     n = x.shape[0]
-    m = mesh.shape[AXIS]
+    m = mesh.shape[axis]
     w = num_workers or m
     assert (m & (m - 1)) == 0, f"device count {m} not a power of 2"
     assert w % m == 0 and (w & (w - 1)) == 0, (w, m)
@@ -184,20 +184,20 @@ def shard_map_sort(x, mesh: Mesh,
     if hash_homed:
         # logical element i*m + d sits in row i of device d's column
         xin = x.reshape(chunk, m)
-        in_spec = P(None, AXIS)
+        in_spec = P(None, axis)
     else:
         xin = x
-        in_spec = P(AXIS)
+        in_spec = P(axis)
 
     if policy.localised:
         body = partial(_localised_shard, m=m, chunk=chunk,
                        w_per_dev=w_per_dev, hash_homed=hash_homed,
-                       local_sort=local_sort, interpret=interpret)
-        out_spec = P(AXIS)                         # chunk-contiguous output
+                       local_sort=local_sort, interpret=interpret, axis=axis)
+        out_spec = P(axis)                         # chunk-contiguous output
     else:
         body = partial(_unlocalised_shard, m=m, chunk=chunk, w=w,
                        hash_homed=hash_homed, local_sort=local_sort,
-                       interpret=interpret)
+                       interpret=interpret, axis=axis)
         out_spec = in_spec                         # output stays home-pinned
 
     y = shard_map(body, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
@@ -210,11 +210,11 @@ def shard_map_sort(x, mesh: Mesh,
 def make_engine_fn(mesh: Optional[Mesh], policy: LocalisationPolicy,
                    num_workers: Optional[int] = None,
                    local_sort: LocalSort = "bitonic",
-                   interpret: bool = True):
+                   interpret: bool = True, axis: str = AXIS):
     """Jitted engine sort for one Table-1 case; input donated (step 5)."""
     if mesh is None:
-        mesh = jax.make_mesh((len(jax.devices()),), (AXIS,))
+        mesh = jax.make_mesh((len(jax.devices()),), (axis,))
     fn = partial(shard_map_sort, mesh=mesh, policy=policy,
                  num_workers=num_workers, local_sort=local_sort,
-                 interpret=interpret)
+                 interpret=interpret, axis=axis)
     return jax.jit(fn, donate_argnums=(0,))

@@ -13,6 +13,10 @@ A *homing* is a layout rule that decides which device owns each element of a
 
 The interleaved layout is expressed by viewing the array as (n/N, N) and
 sharding the *minor* axis — structurally identical to cache-line striping.
+
+These are the layout *mechanics*; the public surface is `repro.core.api`:
+`Locale.put` places under a homing (returning a `Homed` wrapper) and
+`Locale.pin` emits the in-jit constraint form.
 """
 from __future__ import annotations
 
@@ -37,11 +41,26 @@ def interleaved_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
     return NamedSharding(mesh, P(None, axis))
 
 
+def check_divisible(n: int, N: int, homing: Homing, axis: str) -> None:
+    """Raise a clear error when n elements can't split over N devices.
+
+    Both homings need n % N == 0 (a chunk per device / a full stripe row);
+    callers that want arbitrary lengths pad first with
+    `repro.core.sort.pad_to_multiple(x, N)` and strip the sentinel tail.
+    """
+    if n % N != 0:
+        raise ValueError(
+            f"cannot home {n} elements as {homing.value!r} over the {N} "
+            f"devices of mesh axis {axis!r}: {n} % {N} != 0 — pad with "
+            f"pad_to_multiple(x, {N}) (sentinels sort to the tail) or pass "
+            f"pad=True to Locale.put")
+
+
 def to_layout(x, mesh: Mesh, homing: Homing, axis: str = "data"):
     """Place a 1-D array under the given homing (outside jit)."""
     n = x.shape[0]
     N = mesh.shape[axis]
-    assert n % N == 0, (n, N)
+    check_divisible(n, N, homing, axis)
     if homing == Homing.LOCAL_CHUNKED:
         return jax.device_put(x, chunked_sharding(mesh, axis))
     return jax.device_put(x.reshape(n // N, N), interleaved_sharding(mesh, axis))
@@ -62,6 +81,7 @@ def constrain(x, mesh: Mesh, homing: Homing, axis: str = "data"):
         return jax.lax.with_sharding_constraint(x, chunked_sharding(mesh, axis))
     n = x.shape[0]
     N = mesh.shape[axis]
+    check_divisible(n, N, homing, axis)
     y = x.reshape(n // N, N)
     y = jax.lax.with_sharding_constraint(y, interleaved_sharding(mesh, axis))
     return y.reshape(n)

@@ -10,6 +10,10 @@
 chunk-contiguous ("locally homed") layout, done *before* repeated-access
 compute. Its cost is one all-to-all; it pays for itself once the data is
 touched more than ~once — exactly the paper's Fig 1 amortisation argument.
+
+These are the policy mechanics behind the public `repro.core.api` surface:
+`Locale.localise` / `Locale.pin` / `Locale.jit` wrap them with the
+(mesh, axis, policy) bundle so callers never thread those tuples by hand.
 """
 from __future__ import annotations
 

@@ -8,6 +8,8 @@ layout and writes the worker-owned chunk — one all-to-all per pass.
 
 The wall-clock gap therefore grows with R: the one-shot localisation copy is
 amortised, exactly the paper's Figure 1.
+
+Entry point: `Locale.workload("microbench", reps=R)` (`repro.core.api`).
 """
 from __future__ import annotations
 
@@ -27,23 +29,30 @@ def _pass(y):
 
 
 def repetitive_copy(x, reps: int, mesh: Optional[Mesh],
-                    policy: LocalisationPolicy):
+                    policy: LocalisationPolicy, axis: str = "data"):
     """R passes over a 1-D array under the policy. Returns the output array."""
+    static = mesh is not None and policy.static_mapping
     if policy.localised:
-        y = localise(x, mesh)               # Algorithm 2's memcpy, once
+        y = localise(x, mesh, axis)          # Algorithm 2's memcpy, once
 
         def body(_, y):
-            return localise(_pass(y), mesh)  # stays local: no traffic
-    else:
+            return localise(_pass(y), mesh, axis)  # stays local: no traffic
+    elif static:
         y = x
 
         def body(_, y):
-            if mesh is not None and policy.static_mapping:
-                y = constrain(y, mesh, policy.homing)   # re-pin to hash layout
+            y = constrain(y, mesh, policy.homing, axis)  # re-pin to hash layout
             z = _pass(y)
-            return localise(z, mesh)        # worker writes its own chunk
+            return localise(z, mesh, axis)   # worker writes its own chunk
+    else:
+        # the 'leave it to the compiler/scheduler' baseline: no constraints
+        # at all — any layout hint here would silently un-baseline it
+        y = x
+
+        def body(_, y):
+            return _pass(y)
     y = jax.lax.fori_loop(0, reps, body, y)
-    return localise(y, mesh)
+    return localise(y, mesh, axis) if (policy.localised or static) else y
 
 
 def reference(x, reps: int):
@@ -54,6 +63,7 @@ def reference(x, reps: int):
     return y
 
 
-def make_microbench_fn(mesh, policy: LocalisationPolicy, reps: int):
+def make_microbench_fn(mesh, policy: LocalisationPolicy, reps: int,
+                       axis: str = "data"):
     return jax.jit(partial(repetitive_copy, reps=reps, mesh=mesh,
-                           policy=policy), donate_argnums=(0,))
+                           policy=policy, axis=axis), donate_argnums=(0,))

@@ -75,11 +75,12 @@ def merge_sorted(a, b):
 _merge_rows = jax.vmap(merge_sorted)
 
 
-def _constrain_runs(runs, mesh: Optional[Mesh], policy: LocalisationPolicy):
+def _constrain_runs(runs, mesh: Optional[Mesh], policy: LocalisationPolicy,
+                    axis: str = "data"):
     """Layout the (count, size) run matrix per policy, between tree levels."""
     if mesh is None or not policy.static_mapping:
         return runs
-    N = mesh.shape["data"]
+    N = mesh.shape[axis]
     count, size = runs.shape
     if not policy.localised and policy.homing == Homing.LOCAL_CHUNKED:
         # paper case 2/4: the conventional code under local homing — the whole
@@ -89,14 +90,14 @@ def _constrain_runs(runs, mesh: Optional[Mesh], policy: LocalisationPolicy):
             runs, NamedSharding(mesh, P(None, None)))
     if policy.localised:
         # each run homed on its leader's device (chunk-contiguous rows)
-        spec = P("data", None) if count % N == 0 else P(None, "data") \
+        spec = P(axis, None) if count % N == 0 else P(None, axis) \
             if size % N == 0 else P(None, None)
         return jax.lax.with_sharding_constraint(runs, NamedSharding(mesh, spec))
     # hash-for-home: every run striped element-wise across all devices
     if size % N == 0:
         r = runs.reshape(count, size // N, N)
         r = jax.lax.with_sharding_constraint(
-            r, NamedSharding(mesh, P(None, None, "data")))
+            r, NamedSharding(mesh, P(None, None, axis)))
         return r.reshape(count, size)
     return runs
 
@@ -104,7 +105,8 @@ def _constrain_runs(runs, mesh: Optional[Mesh], policy: LocalisationPolicy):
 def distributed_merge_sort(x, mesh: Optional[Mesh] = None,
                            policy: LocalisationPolicy = LocalisationPolicy(),
                            num_workers: Optional[int] = None,
-                           local_sort: Callable = jnp.sort):
+                           local_sort: Callable = jnp.sort,
+                           axis: str = "data"):
     """Sort a 1-D array with an m-worker merge tree (m = #devices default).
 
     Arbitrary lengths are supported: the input is padded with BIG sentinels
@@ -112,22 +114,23 @@ def distributed_merge_sort(x, mesh: Optional[Mesh] = None,
     Float inputs must be NaN-free (see `pad_to_multiple`).
     """
     n = x.shape[0]
-    m = num_workers or (mesh.shape["data"] if mesh is not None else 8)
+    m = num_workers or (mesh.shape[axis] if mesh is not None else 8)
     assert (m & (m - 1)) == 0, m
 
     x = pad_to_multiple(x, m)
     runs = x.reshape(m, x.shape[0] // m)
-    runs = _constrain_runs(runs, mesh, policy)
+    runs = _constrain_runs(runs, mesh, policy, axis)
     runs = local_sort(runs, axis=-1)                 # leaves of the tree
-    runs = _constrain_runs(runs, mesh, policy)
+    runs = _constrain_runs(runs, mesh, policy, axis)
     while runs.shape[0] > 1:
         merged = _merge_rows(runs[0::2], runs[1::2])
-        runs = _constrain_runs(merged, mesh, policy)
+        runs = _constrain_runs(merged, mesh, policy, axis)
     return runs[0][:n]
 
 
 def make_sort_fn(mesh, policy: LocalisationPolicy, num_workers=None,
-                 local_sort=None, backend: str = "constraint"):
+                 local_sort=None, backend: str = "constraint",
+                 axis: str = "data", interpret: bool = True):
     """Jitted sort for one Table-1 case; input buffer donated (step 5).
 
     backend="constraint": the original `with_sharding_constraint`-hint tree —
@@ -138,13 +141,18 @@ def make_sort_fn(mesh, policy: LocalisationPolicy, num_workers=None,
 
     `local_sort=None` picks the backend default (jnp.sort for the hint
     backend, the Pallas bitonic kernel for the engine).
+
+    Callers normally reach this through `Locale.workload("sort", ...)`
+    (`repro.core.api`), which supplies (mesh, axis, policy) from one object.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
     if backend == "shard_map":
         from repro.core.engine import make_engine_fn   # local: avoid cycle
         return make_engine_fn(mesh, policy, num_workers=num_workers,
-                              local_sort=local_sort or "bitonic")
+                              local_sort=local_sort or "bitonic",
+                              axis=axis, interpret=interpret)
     fn = partial(distributed_merge_sort, mesh=mesh, policy=policy,
-                 num_workers=num_workers, local_sort=local_sort or jnp.sort)
+                 num_workers=num_workers, local_sort=local_sort or jnp.sort,
+                 axis=axis)
     return jax.jit(fn, donate_argnums=(0,))

@@ -1,9 +1,11 @@
 """Synthetic LM data pipeline with *localised placement*.
 
-The pipeline is the data-path expression of the paper's technique: each
-device's batch chunk is generated directly on (for) that device via
-`make_array_from_callback` with the chunk-contiguous sharding — data is born
-locally homed, never resharded after the fact (Algorithm 1 steps 1-4 fused).
+The pipeline is the data-path expression of the paper's technique: batches
+are *born* locally homed through `Locale.make` — each device's batch chunk
+is generated directly on (for) that device, never resharded after the fact
+(Algorithm 1 steps 1-4 fused).  This is the same placement code path the
+sort and the serving layer use; the pipeline constructs no shardings of
+its own.
 
 Determinism: batch content is a pure function of (seed, step, element row),
 so a restart replays exactly the same batches — the property checkpoint
@@ -16,12 +18,11 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
+from repro.core.api import Locale
 
 
 def _row_tokens(seed: int, step: int, row: int, seq_len: int,
@@ -45,36 +46,39 @@ class SyntheticLM:
     seed: int = 0
     mesh: Optional[Mesh] = None
 
-    def _sharding(self):
+    @property
+    def locale(self) -> Locale:
+        """Batch rows chunk-contiguous over the data-parallel axes."""
         if self.mesh is None:
-            return None
+            return Locale(mesh=None)
         dp = tuple(a for a in self.mesh.axis_names if a != "model")
-        return NamedSharding(self.mesh, P(dp, None))
+        return Locale(mesh=self.mesh, axis=dp)
 
     def batch(self, step: int) -> dict:
         B, S, V = self.global_batch, self.seq_len, self.cfg.vocab_size
-        sh = self._sharding()
+        locale = self.locale
+
+        built = {}
 
         def build(rows):
-            return np.stack([_row_tokens(self.seed, step, r, S, V)
-                             for r in rows])
+            # both callbacks see the same row range per device — build once
+            key = (rows.start, rows.stop)
+            if key not in built:
+                built[key] = np.stack([_row_tokens(self.seed, step, r, S, V)
+                                       for r in rows])
+            return built[key]
 
-        if sh is None:
-            full = build(range(B))
-            toks, tgts = full[:, :-1], full[:, 1:]
-        else:
-            # localised placement: each device materialises only its chunk
-            def cb(index):
-                rows = range(*index[0].indices(B))
-                block = build(rows)
-                return block[:, :-1]
+        # localised placement: each device materialises only the rows it owns
+        def cb(index):
+            rows = range(*index[0].indices(B))
+            return build(rows)[:, :-1]
 
-            def cb_t(index):
-                rows = range(*index[0].indices(B))
-                return build(rows)[:, 1:]
+        def cb_t(index):
+            rows = range(*index[0].indices(B))
+            return build(rows)[:, 1:]
 
-            toks = jax.make_array_from_callback((B, S), sh, cb)
-            tgts = jax.make_array_from_callback((B, S), sh, cb_t)
+        toks = locale.make((B, S), cb)
+        tgts = locale.make((B, S), cb_t)
         batch = {"targets": jnp.asarray(tgts)}
         if self.cfg.embed_input:
             batch["tokens"] = jnp.asarray(toks)

@@ -4,6 +4,13 @@ Requests queue up; whenever slots free (EOS/max-len), queued prompts are
 prefilled into the freed slots at the next wave boundary. All active slots
 share the decode position clock (aligned batching); per-slot masks retire
 finished sequences. The KV cache is donated across steps (free-asap).
+
+Cache placement goes through the same `Locale` API as every other workload:
+each request's KV-cache slot is homed chunk-contiguously over the batch-slot
+axis (`Locale.pin_tree` inside the jitted step), so a slot's cache lives
+wholly on the device that decodes it instead of being re-laid-out by the
+compiler per decode step — the paper's one-shot localisation applied to
+serving state.
 """
 from __future__ import annotations
 
@@ -17,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.api import Locale
 from repro.models.model import LM
 from repro.sharding.partition import MeshPlan, NULL_PLAN
 
@@ -33,16 +41,29 @@ class Request:
 class DecodeServer:
     def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
                  max_len: int = 128, plan: MeshPlan = NULL_PLAN,
-                 greedy: bool = True):
+                 greedy: bool = True, locale: Optional[Locale] = None):
         assert cfg.embed_input, "server serves token LMs"
         self.cfg, self.params, self.plan = cfg, params, plan
         self.B, self.max_len = batch_slots, max_len
         self.model = LM(cfg)
         self.queue: List[Request] = []
         self.greedy = greedy
-        self._decode = jax.jit(
-            lambda p, c, b, pos: self.model.decode_step(p, c, b, pos, plan),
-            donate_argnums=(1,))
+        if locale is None:
+            # home cache slots over the plan's batch axes; degenerate
+            # (no-op) locale when the plan has no mesh or no batch sharding
+            slot_axes = plan.batch_axes if plan.mesh is not None else None
+            locale = Locale(mesh=plan.mesh if slot_axes else None,
+                            axis=slot_axes or "data")
+        self.locale = locale
+
+        def _step(p, c, b, pos):
+            logits, c2 = self.model.decode_step(p, c, b, pos, plan)
+            # re-home each slot's cache on its decode device (slot dim = 1:
+            # cache leaves are (layers, slot, ...); non-slot leaves skipped)
+            c2 = self.locale.pin_tree(c2, dim=1, size=b["tokens"].shape[0])
+            return logits, c2
+
+        self._decode = self.locale.jit(_step, donate=(1,))
 
     def submit(self, req: Request):
         self.queue.append(req)

@@ -14,8 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (Homing, LocalisationPolicy, make_engine_fn,
-                        make_sort_fn, pad_to_multiple, pad_value)
+from repro.core import (Homing, Locale, LocalisationPolicy, pad_to_multiple,
+                        pad_value)
 
 POLICIES = [LocalisationPolicy(loc, True, h)
             for loc in (True, False)
@@ -46,7 +46,7 @@ def test_pad_to_multiple_strips_cleanly(n, m):
 
 def test_unknown_backend_rejected():
     with pytest.raises(ValueError):
-        make_sort_fn(None, LocalisationPolicy(), backend="nope")
+        Locale().workload("sort", backend="nope")
 
 
 # one (n, dtype) config per policy; the fast lane keeps the two policy
@@ -66,7 +66,7 @@ def test_engine_single_device_bit_exact(policy, dtype, n):
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     x = _rand(n, jnp.dtype(dtype))
     expect = np.sort(np.asarray(x))
-    fn = make_engine_fn(mesh, policy, num_workers=8)
+    fn = Locale(mesh=mesh, policy=policy).workload("engine", num_workers=8)
     np.testing.assert_array_equal(np.asarray(fn(x)), expect)
 
 
@@ -75,7 +75,7 @@ def test_constraint_backend_arbitrary_length_padding():
     for n, dtype in ((4097, jnp.int32), (100, jnp.float32)):
         x = _rand(n, dtype)
         expect = np.sort(np.asarray(x))
-        fn = make_sort_fn(None, LocalisationPolicy(), num_workers=8)
+        fn = Locale().workload("sort", num_workers=8)
         np.testing.assert_array_equal(np.asarray(fn(x)), expect)
 
 
@@ -85,8 +85,7 @@ def test_sentinel_values_in_data_survive():
         # fresh input per backend: the jitted sorts donate their argument
         x = jnp.asarray([5, jnp.iinfo(jnp.int32).max, -3, 1, 2], jnp.int32)
         expect = np.sort(np.asarray(x))
-        fn = make_sort_fn(None, LocalisationPolicy(), num_workers=4,
-                          backend=backend)
+        fn = Locale().workload("sort", num_workers=4, backend=backend)
         np.testing.assert_array_equal(np.asarray(fn(x)), expect)
 
 
@@ -97,8 +96,8 @@ def test_engine_8dev_all_cases_both_backends():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from repro.core import Homing, LocalisationPolicy, make_sort_fn
-mesh = jax.make_mesh((8,), ("data",))
+from repro.core import Homing, Locale, LocalisationPolicy
+locale = Locale.auto()
 for backend in ["constraint", "shard_map"]:
     for loc in [True, False]:
         for h in [Homing.LOCAL_CHUNKED, Homing.HASH_INTERLEAVED]:
@@ -110,7 +109,7 @@ for backend in ["constraint", "shard_map"]:
                     x = jax.random.normal(jax.random.key(0), (n,), dt)
                 expect = np.asarray(jnp.sort(x))
                 pol = LocalisationPolicy(loc, True, h)
-                fn = make_sort_fn(mesh, pol, backend=backend)
+                fn = locale.with_policy(pol).workload("sort", backend=backend)
                 y = np.asarray(fn(x))
                 np.testing.assert_array_equal(y, expect,
                     err_msg=f"{backend} {pol.name} {n} {dt}")
@@ -132,12 +131,12 @@ def test_engine_collective_structure_matches_policy():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
-from repro.core import Homing, LocalisationPolicy, make_sort_fn
+from repro.core import Homing, Locale, LocalisationPolicy
 from repro.launch.hlo_cost import analyze
-mesh = jax.make_mesh((8,), ("data",))
+locale = Locale.auto()
 x = jnp.zeros((1 << 13,), jnp.int32)
 def counts(policy):
-    fn = make_sort_fn(mesh, policy, backend="shard_map")
+    fn = locale.with_policy(policy).workload("sort", backend="shard_map")
     return analyze(fn.lower(x).compile().as_text())["collective_counts"]
 c = counts(LocalisationPolicy(True, True, Homing.LOCAL_CHUNKED))
 assert c.get("collective-permute") == 6 and "all-gather" not in c, c
