@@ -11,6 +11,14 @@ here — the Pallas kernel only *interprets* on CPU, drowning the collective
 signal) or ``bitonic`` (the VMEM-resident kernel, the TPU configuration).
 ``--logn`` scales the input (smoke runs use a small one).
 
+``--pods PxD[xM]`` switches to the hierarchical grid instead: an
+emulated-pod (pod, data, model) mesh, the engine run for the hierarchical
+policy vs the flat localised / flat non-localised ones, and — the paper's
+Fig-9 locality argument made measurable — one ``engine_*_level*`` record
+per collective with its inter-pod vs intra-pod exchange bytes
+(`repro.core.engine.exchange_schedule`), plus an ``inter_total`` summary
+row per policy.  These rows land in ``BENCH_engine.json``.
+
 All placement goes through `Locale`: one locale per Table-1 case, the sort
 built with ``locale.workload("sort", backend=...)``.
 """
@@ -20,8 +28,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_sort import CASES
-from repro.core import BACKENDS, Homing, Locale, LocalisationPolicy
+from repro.core import (BACKENDS, Homing, Locale, LocalisationPolicy,
+                        exchange_schedule)
 from repro.launch.hlo_cost import analyze
+from repro.launch.mesh import make_host_mesh
 from benchmarks.common import timeit
 
 
@@ -55,6 +65,48 @@ def run_grid(locale, n_dev: int, backend: str, local_sort, t_base: float,
               f"bytes/dev={by/1e6:.0f}MB;coll/dev={coll/1e6:.1f}MB")
 
 
+def pod_policies():
+    """The hierarchical grid: two-distance-class engine vs the flat paths."""
+    return [LocalisationPolicy.hierarchical(),            # intra ppermute +
+                                                          # top all_gather
+            LocalisationPolicy(True, True, Homing.LOCAL_CHUNKED),   # flat loc
+            LocalisationPolicy(False, True, Homing.LOCAL_CHUNKED)]  # flat
+                                                          # nonloc: every
+                                                          # level crosses DCN
+
+
+def run_pods(pods: str, logn: int, local_sort):
+    """Hierarchical engine grid on an emulated-pod mesh (--pods PxD[xM])."""
+    try:
+        dims = [int(d) for d in pods.split("x")]
+    except ValueError:
+        dims = []
+    if len(dims) == 2:
+        dims.append(1)
+    if len(dims) != 3:
+        raise SystemExit(f"--pods wants PxD or PxDxM (e.g. 2x4 or 2x2x2), "
+                         f"got {pods!r}")
+    n_pods, n_data, n_model = dims
+    mesh = make_host_mesh(n_data=n_data, n_model=n_model, n_pods=n_pods)
+    locale = Locale(mesh=mesh, axis=("pod", "data"))
+    n = 1 << logn
+    tag = f"pods{n_pods}x{n_data}x{n_model}"
+    sizes = (n_pods, n_data)
+    for pol in pod_policies():
+        fn = locale.with_policy(pol).workload("sort", backend="shard_map",
+                                              local_sort=local_sort)
+        t = timeit(lambda: fn(fresh(n)))
+        sched = exchange_schedule(n, sizes, pol)
+        inter = sum(r["inter_pod_bytes"] for r in sched)
+        intra = sum(r["intra_pod_bytes"] for r in sched)
+        print(f"engine_{tag}_{pol.name},{t:.0f},"
+              f"inter_total={inter};intra_total={intra};n={n}")
+        for k, r in enumerate(sched):
+            print(f"engine_{tag}_{pol.name}_x{k},,"
+                  f"level={r['level']};op={r['op']};"
+                  f"inter={r['inter_pod_bytes']};intra={r['intra_pod_bytes']}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=BACKENDS + ("both",),
@@ -66,11 +118,18 @@ def main(argv=None):
                          "paper's 100M for the CPU harness)")
     ap.add_argument("--cases", type=lambda s: {int(c) for c in s.split(",")},
                     default=None, help="comma list of Table-1 cases to run")
+    ap.add_argument("--pods", default=None, metavar="PxD[xM]",
+                    help="run the hierarchical multi-pod engine grid on an "
+                         "emulated (pod, data, model) mesh instead")
     args = ap.parse_args(argv)
+    local_sort = jnp.sort if args.local_sort == "jnp" else "bitonic"
+    if args.pods:
+        print("name,us_per_call,derived")
+        run_pods(args.pods, args.logn, local_sort)
+        return
     n = 1 << args.logn
     n_dev = len(jax.devices())
     locale = Locale.auto()
-    local_sort = jnp.sort if args.local_sort == "jnp" else "bitonic"
     print("name,us_per_call,derived")
     # the paper's normalisation: 1 worker, default policy — one shared
     # baseline (the engine is per-device, so it has no 1-worker mode)

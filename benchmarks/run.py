@@ -20,21 +20,34 @@ import sys
 
 from benchmarks.common import run_with_devices
 
+# (key, module, description): `key` names the run (a module may appear more
+# than once with different argv — the pods grid reuses bench_sort_cases)
 MULTIDEV = [
-    ("bench_microbench", "paper Fig 1: localised vs non-localised microbench"),
-    ("bench_sort_cases", "paper Table 1 + Fig 2: merge sort cases 1-8"),
-    ("bench_sort_sizes", "paper Fig 3: input-size sweep"),
-    ("bench_striping", "paper Fig 4: striping analogue"),
+    ("bench_microbench", "bench_microbench",
+     "paper Fig 1: localised vs non-localised microbench"),
+    ("bench_sort_cases", "bench_sort_cases",
+     "paper Table 1 + Fig 2: merge sort cases 1-8"),
+    ("bench_sort_pods", "bench_sort_cases",
+     "hierarchical multi-pod engine: inter/intra-pod exchange bytes (Fig 9)"),
+    ("bench_sort_sizes", "bench_sort_sizes", "paper Fig 3: input-size sweep"),
+    ("bench_striping", "bench_striping", "paper Fig 4: striping analogue"),
 ]
 LOCAL = [
     ("bench_kernels", "Pallas kernel localisation (Fig 1, TPU-native)"),
     ("bench_roofline", "dry-run roofline table (EXPERIMENTS.md)"),
 ]
 
-# per-module argv for --smoke: toy sizes, a case subset, short sweeps
+# per-run argv for the full harness (8 devices)
+FULL_ARGS = {
+    "bench_sort_pods": ["--pods", "2x4", "--logn", "18"],
+}
+
+# per-run argv for --smoke: toy sizes, a case subset, short sweeps;
+# the pods grid runs on the 2 smoke devices as a (2, 1, 1) emulated mesh
 SMOKE_ARGS = {
     "bench_microbench": ["--n", "4096", "--reps", "2"],
     "bench_sort_cases": ["--logn", "12", "--cases", "3,8"],
+    "bench_sort_pods": ["--pods", "2x1", "--logn", "10"],
     "bench_sort_sizes": ["--logns", "12"],
     "bench_striping": ["--logn", "14"],
 }
@@ -43,6 +56,7 @@ SMOKE_ARGS = {
 JSON_FILES = {
     "BENCH_sort.json": ("sort_",),
     "BENCH_microbench.json": ("microbench_",),
+    "BENCH_engine.json": ("engine_",),
 }
 
 
@@ -96,9 +110,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     n_devices = 2 if args.smoke else 8
     records = []
-    for mod, desc in MULTIDEV:
-        print(f"# === {mod}: {desc} ===", flush=True)
-        extra = SMOKE_ARGS.get(mod, []) if args.smoke else []
+    for key, mod, desc in MULTIDEV:
+        print(f"# === {key}: {desc} ===", flush=True)
+        extra = (SMOKE_ARGS.get(key, []) if args.smoke
+                 else FULL_ARGS.get(key, []))
         out = run_with_devices(mod, n_devices=n_devices, args=extra)
         sys.stdout.write(out)
         sys.stdout.flush()

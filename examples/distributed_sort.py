@@ -56,6 +56,21 @@ def main():
     assert bool(jnp.all(y[1:] >= y[:-1]))
     print("shard_map engine + pallas bitonic local sort: ok (interpret mode)")
 
+    # two distance classes: an emulated (pod, data, model) mesh, the deep
+    # merge-split levels confined to intra-pod ppermutes and ONE all_gather
+    # over the pod axis per top level (see README "Hierarchy")
+    if n_dev >= 2 and n_dev % 2 == 0:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(n_data=n_dev // 2, n_model=1, n_pods=2)
+        hier = Locale(mesh=mesh, axis=("pod", "data"),
+                      policy=LocalisationPolicy.hierarchical())
+        fn = hier.workload("sort", backend="shard_map", local_sort=jnp.sort)
+        x = jax.random.randint(jax.random.key(2), (1 << 14,), 0, 1 << 30,
+                               dtype=jnp.int32)
+        y = jax.block_until_ready(fn(x))
+        assert bool(jnp.all(y[1:] >= y[:-1]))
+        print(f"hierarchical engine on 2x{n_dev // 2} emulated pods: ok")
+
     # the kernel standalone
     xs = jax.random.randint(jax.random.key(1), (8, 512), 0, 1 << 30,
                             dtype=jnp.int32)

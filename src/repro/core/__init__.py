@@ -30,9 +30,9 @@ from repro.core import sort as _sort
 from repro.core.api import Homed, Locale, register_workload
 from repro.core.homing import Homing, check_divisible
 from repro.core.localisation import LocalisationPolicy, chunk_bounds
-from repro.core.sort import (BACKENDS, distributed_merge_sort, merge_sorted,
-                             pad_to_multiple, pad_value)
-from repro.core.engine import shard_map_sort
+from repro.core.sort import (BACKENDS, check_nan_free, distributed_merge_sort,
+                             merge_sorted, pad_to_multiple, pad_value)
+from repro.core.engine import exchange_schedule, shard_map_sort
 from repro.core.microbench import repetitive_copy
 
 
@@ -65,9 +65,9 @@ make_microbench_fn = _deprecated("make_microbench_fn",
 __all__ = ["Locale", "Homed", "register_workload",
            "Homing", "check_divisible",
            "LocalisationPolicy", "chunk_bounds",
-           "BACKENDS", "distributed_merge_sort", "merge_sorted",
-           "pad_to_multiple", "pad_value",
-           "shard_map_sort", "repetitive_copy",
+           "BACKENDS", "check_nan_free", "distributed_merge_sort",
+           "merge_sorted", "pad_to_multiple", "pad_value",
+           "exchange_schedule", "shard_map_sort", "repetitive_copy",
            # deprecated shims
            "to_layout", "constrain", "logical_view", "localise", "place",
            "make_sort_fn", "make_engine_fn", "make_microbench_fn"]

@@ -44,17 +44,16 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple, Union
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.homing import (Homing, check_divisible, logical_view,
+from repro.core.homing import (Axis, Homing, check_divisible, logical_view,
                                to_layout)
+from repro.core.homing import axis_size as _mesh_axis_size
 from repro.core.localisation import LocalisationPolicy, localise, place
-
-Axis = Union[str, Tuple[str, ...]]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -120,9 +119,12 @@ class Locale:
 
     ``mesh=None`` is the single-device degenerate locale: every placement
     method becomes the identity, so workload code is written once and runs
-    unchanged from a laptop to a pod.  `axis` may be a tuple of mesh axes
-    for chunk-contiguous placement (e.g. the ("pod", "data") data-parallel
-    axes); hash-interleaving requires a single axis.
+    unchanged from a laptop to a pod.  `axis` may be a tuple of mesh axes,
+    outer (slow, DCN) axes first — ``Locale(mesh, axis=("pod", "data"))``
+    linearises devices pod-major, and every placement method (`put`, `pin`,
+    `localise`, `make`) and workload (`workload("sort",
+    backend="shard_map")` — the hierarchical engine) works across both
+    hierarchy levels.
     """
     mesh: Optional[Mesh] = None
     axis: Axis = "data"
@@ -149,16 +151,7 @@ class Locale:
         """#devices along the locale's axis (1 without a mesh)."""
         if self.mesh is None:
             return 1
-        axes = self.axis if isinstance(self.axis, tuple) else (self.axis,)
-        return math.prod(self.mesh.shape[a] for a in axes)
-
-    def _single_axis(self) -> str:
-        if isinstance(self.axis, tuple):
-            if len(self.axis) != 1:
-                raise ValueError(
-                    f"this operation needs a single mesh axis, got {self.axis}")
-            return self.axis[0]
-        return self.axis
+        return _mesh_axis_size(self.mesh, self.axis)
 
     def spec(self, ndim: int = 1) -> P:
         """Chunk-contiguous spec: leading dim owned per-device, rest whole."""
@@ -187,9 +180,8 @@ class Locale:
             import jax.numpy as jnp
             return Homed(jnp.asarray(x), self.policy.homing, self.axis)
         if self.policy.homing == Homing.HASH_INTERLEAVED:
-            placed = to_layout(x, self.mesh, self.policy.homing,
-                               self._single_axis())
-            return Homed(placed, self.policy.homing, self._single_axis())
+            placed = to_layout(x, self.mesh, self.policy.homing, self.axis)
+            return Homed(placed, self.policy.homing, self.axis)
         check_divisible(x.shape[0], self.axis_size, self.policy.homing,
                         str(self.axis))
         placed = jax.device_put(x, self.sharding(getattr(x, "ndim", 1)))
@@ -216,15 +208,14 @@ class Locale:
             return Homed(pinned.reshape(x.data.shape), x.homing, x.axis)
         if self.mesh is None or not self.policy.static_mapping:
             return x
-        return place(x, self.mesh, self.policy, self._single_axis())
+        return place(x, self.mesh, self.policy, self.axis)
 
     def localise(self, x):
         """The one-shot Algorithm-2 relayout into the locally-homed layout."""
-        axis = self._single_axis() if self.mesh is not None else "data"
         if isinstance(x, Homed):
-            return Homed(localise(x.logical(), self.mesh, axis),
+            return Homed(localise(x.logical(), self.mesh, self.axis),
                          Homing.LOCAL_CHUNKED, self.axis)
-        return localise(x, self.mesh, axis)
+        return localise(x, self.mesh, self.axis)
 
     def pin_tree(self, tree, dim: int = 0, size: Optional[int] = None):
         """Home every pytree leaf chunk-contiguously along `dim`.
@@ -294,9 +285,14 @@ class Locale:
 @register_workload("sort")
 def _sort_workload(locale: Locale, *, backend: str = "constraint",
                    num_workers=None, local_sort=None, interpret: bool = True):
-    """The paper's validation app: distributed merge sort (Algorithms 1-3)."""
+    """The paper's validation app: distributed merge sort (Algorithms 1-3).
+
+    A tuple locale axis (e.g. ("pod", "data")) selects the two-distance-class
+    engine: intra-pod neighbour ppermutes on the fast inner axis, cross-pod
+    exchanges per ``policy.outer`` (see `LocalisationPolicy.hierarchical`).
+    """
     from repro.core.sort import make_sort_fn
-    axis = locale._single_axis() if locale.mesh is not None else "data"
+    axis = locale.axis if locale.mesh is not None else "data"
     return make_sort_fn(locale.mesh, locale.policy, num_workers=num_workers,
                         local_sort=local_sort, backend=backend, axis=axis,
                         interpret=interpret)
@@ -316,5 +312,5 @@ def _engine_workload(locale: Locale, **kw):
 def _microbench_workload(locale: Locale, *, reps: int):
     """The Fig-1 repetitive-copy micro-benchmark."""
     from repro.core.microbench import make_microbench_fn
-    axis = locale._single_axis() if locale.mesh is not None else "data"
+    axis = locale.axis if locale.mesh is not None else "data"
     return make_microbench_fn(locale.mesh, locale.policy, reps, axis=axis)

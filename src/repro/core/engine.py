@@ -33,6 +33,28 @@ literally, per device:
                         lives on another device — the per-level all-to-all
                         of Table 1 cases 1/3.
 
+Two distance classes (the NUCA gradient of a multi-pod deployment — fast
+ICI within a pod, slow DCN across pods) enter through `axis`: a *tuple* of
+mesh axes, outer (pod) axes first, linearised row-major so device
+d = pod * n_inner + inner owns logical chunk d.  Merge-split strides that
+stay below the inner-axis size toggle only the inner index — those
+exchanges run as intra-pod `ppermute`s on the fast axis.  Strides at or
+above it toggle only pod bits; how they cross the slow link is the
+policy's `outer` knob:
+
+  outer=None          — flat: cross-pod substages are the same pairwise
+                        chunk `ppermute`s, just routed over the pod axis
+                        (stride-many DCN round trips per top stage).
+  outer="hash"/
+  "replicate"         — hierarchical: each top stage's cross-pod substages
+                        collapse into ONE `all_gather` over the pod axes
+                        (the n_pods chunks at my inner index), and every
+                        pod replays the stage's cross-pod merge-splits
+                        locally on the gathered copies — one DCN collective
+                        per top level, merge work replicated, ownership
+                        never migrating across pods.  Only the top
+                        log2(n_pods) levels touch DCN at all.
+
 The engine returns the same logical sorted array as `jnp.sort`, placed
 chunk-contiguous when localised and in the input homing otherwise.
 """
@@ -40,17 +62,18 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Callable, Optional, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.core.homing import Homing
+from repro.core.homing import Axis, Homing, axis_tuple
 from repro.core.localisation import LocalisationPolicy, chunk_bounds
-from repro.core.sort import merge_sorted, pad_to_multiple, pad_value
+from repro.core.sort import (check_pad_outside_trace, merge_sorted,
+                             pad_to_multiple, pad_value)
 from repro.kernels.bitonic_sort import bitonic_sort
 
 AXIS = "data"
@@ -58,6 +81,47 @@ AXIS = "data"
 _merge_rows = jax.vmap(merge_sorted)
 
 LocalSort = Union[str, Callable]
+
+
+def _axes_sizes(mesh: Mesh, axes: Tuple[str, ...]) -> Tuple[int, ...]:
+    sizes = tuple(mesh.shape[a] for a in axes)
+    for a, s in zip(axes, sizes):
+        assert (s & (s - 1)) == 0, f"axis {a!r} size {s} not a power of 2"
+    return sizes
+
+
+def _axis_name(axes: Tuple[str, ...]):
+    """The collective axis-name argument: bare name or tuple (linearised)."""
+    return axes[0] if len(axes) == 1 else axes
+
+
+def engine_granule(m: int, num_workers: Optional[int],
+                   hash_homed: bool) -> int:
+    """The engine's padding granule: the chunk must split into per-device
+    leaves, and (when relaying out of the interleaved homing) into one
+    all-to-all block per peer device.  The one definition shared by
+    `shard_map_sort` (in-trace no-op re-pad), `make_engine_fn` (the eager
+    pad that must match it) and `exchange_schedule` (the byte model)."""
+    w = num_workers or m
+    assert w % m == 0 and (w & (w - 1)) == 0, (w, m)
+    return m * math.lcm(w // m, m if hash_homed else 1)
+
+
+def _stride_axis(axes: Tuple[str, ...], sizes: Tuple[int, ...],
+                 j: int) -> Tuple[str, int]:
+    """Which mesh axis bit j of the linearised device index lives on.
+
+    Row-major linearisation with power-of-two sizes means stride 2^j over
+    the combined index toggles exactly one bit of exactly one axis's local
+    index: returns (axis_name, local_stride).
+    """
+    bit = j
+    for a, s in zip(reversed(axes), reversed(sizes)):
+        la = s.bit_length() - 1
+        if bit < la:
+            return a, 1 << bit
+        bit -= la
+    raise ValueError(f"stride 2^{j} exceeds the {math.prod(sizes)}-device space")
 
 
 def _leaf_sort(rows, local_sort: LocalSort, interpret: bool):
@@ -80,15 +144,23 @@ def _leaf_sort(rows, local_sort: LocalSort, interpret: bool):
     return bitonic_sort(rows, interpret=interpret)[:, :leaf]
 
 
+def _merge_split(run, other, chunk: int, keep_low):
+    """One compare-exchange of the block bitonic network: merge, keep half."""
+    both = merge_sorted(run, other)                  # (2*chunk,)
+    return jnp.where(keep_low, both[:chunk], both[chunk:])
+
+
 def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
-                     hash_homed: bool, local_sort: LocalSort,
-                     interpret: bool, axis: str = AXIS):
-    """Per-device body, localised: one-shot relayout + ppermute tree."""
+                     hash_homed: bool, local_sort: LocalSort, interpret: bool,
+                     axes: Tuple[str, ...], sizes: Tuple[int, ...],
+                     hier: bool):
+    """Per-device body, localised: one-shot relayout + merge-split tree."""
+    name = _axis_name(axes)
     if hash_homed:
         # Algorithm 2's memcpy: one explicit all-to-all turns my interleaved
         # column into my contiguous chunk (order scrambled; the sort fixes it).
         blocks = xloc.reshape(m, chunk // m)     # block j goes to device j
-        mine = jax.lax.all_to_all(blocks, axis, 0, 0).reshape(-1)
+        mine = jax.lax.all_to_all(blocks, name, 0, 0).reshape(-1)
     else:
         mine = xloc                       # already the locally-homed chunk
     runs = _leaf_sort(mine.reshape(w_per_dev, chunk // w_per_dev),
@@ -98,42 +170,69 @@ def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
     run = runs[0]
     # block-wise bitonic merge-split network over the hypercube: stage i
     # sorts runs of 2^(i+1) blocks; each substage swaps the full chunk with
-    # device d XOR 2^j (neighbour-only ppermute), merges, and keeps the low
-    # or high half.  Per-device memory stays at chunk size — no device ever
-    # materialises more than 2 chunks — and the sorted array ends naturally
-    # distributed in ownership order (compare-exchange -> merge-split block
-    # sorting is exact by the 0-1 principle, given sorted blocks).
-    d = jax.lax.axis_index(axis)
-    p = m.bit_length() - 1
-    for i in range(p):
-        for j in range(i, -1, -1):
-            stride = 1 << j
-            perm = [(a, a ^ stride) for a in range(m)]
-            other = jax.lax.ppermute(run, axis, perm)
-            both = merge_sorted(run, other)          # (2*chunk,)
+    # device d XOR 2^j, merges, and keeps the low or high half.  Per-device
+    # memory stays at chunk size — no device ever materialises more than a
+    # pod's worth of chunks — and the sorted array ends naturally distributed
+    # in ownership order (compare-exchange -> merge-split block sorting is
+    # exact by the 0-1 principle, given sorted blocks).
+    d = jax.lax.axis_index(name)          # linearised (pod-major) device id
+    m_inner = sizes[-1]
+    log_inner = m_inner.bit_length() - 1
+    n_pods = m // m_inner
+    outer = _axis_name(axes[:-1]) if len(axes) > 1 else None
+    pods_idx = jnp.arange(n_pods)
+    for i in range(m.bit_length() - 1):
+        j0 = i
+        if hier and i >= log_inner:
+            # hierarchical top level: ONE all_gather over the pod axes pulls
+            # the n_pods chunks at my inner index; this stage's cross-pod
+            # substages (j = i..log_inner — they toggle only pod bits, so
+            # everything they read sits in the gathered set) are replayed
+            # locally for every pod, then I keep my own pod's chunk.  One
+            # DCN collective replaces (i - log_inner + 1) pairwise DCN hops.
+            pods = jax.lax.all_gather(run, outer, axis=0)  # (n_pods, chunk)
+            for j in range(i, log_inner - 1, -1):
+                t = 1 << (j - log_inner)            # pod-index stride
+                partner = pods[pods_idx ^ t]
+                # device (q, inner) bits above log_inner are q's bits:
+                asc = ((pods_idx >> (i + 1 - log_inner)) & 1) == 0
+                low = ((pods_idx >> (j - log_inner)) & 1) == 0
+                merged = _merge_rows(pods, partner)  # (n_pods, 2*chunk)
+                keep_low = (low == asc)[:, None]
+                pods = jnp.where(keep_low, merged[:, :chunk],
+                                 merged[:, chunk:])
+            run = jnp.take(pods, d >> log_inner, axis=0)
+            j0 = log_inner - 1                      # intra-pod substages left
+        for j in range(j0, -1, -1):
+            ax, t = _stride_axis(axes, sizes, j)
+            na = sizes[axes.index(ax)]
+            perm = [(a, a ^ t) for a in range(na)]
+            other = jax.lax.ppermute(run, ax, perm)  # neighbour-only traffic
             ascending = ((d >> (i + 1)) & 1) == 0
             is_low = ((d >> j) & 1) == 0
-            keep_low = is_low == ascending
-            run = jnp.where(keep_low, both[:chunk], both[chunk:])
+            run = _merge_split(run, other, chunk, is_low == ascending)
     return run
 
 
 def _unlocalised_shard(xloc, *, m: int, chunk: int, w: int,
                        hash_homed: bool, local_sort: LocalSort,
-                       interpret: bool, axis: str = AXIS):
+                       interpret: bool, axes: Tuple[str, ...]):
     """Per-device body, non-localised: runs stay home-pinned between levels.
 
     Every level gathers the whole array (each worker's reads are remote —
     under hash homing literally every element comes from another device),
     does the level's merges, and writes back only its own home shard.  The
     merge work is replicated across devices: without ownership there is no
-    cheap way to partition it, which is the paper's point.
+    cheap way to partition it, which is the paper's point.  On a pod mesh
+    every one of these gathers is a full cross-pod exchange — the DCN bill
+    the hierarchical policy exists to avoid.
     """
-    d = jax.lax.axis_index(axis)
+    name = _axis_name(axes)
+    d = jax.lax.axis_index(name)
 
     if hash_homed:
         def gather(col):                          # (chunk, 1) -> (n_p,)
-            full = jax.lax.all_gather(col, axis, axis=1, tiled=True)
+            full = jax.lax.all_gather(col, name, axis=1, tiled=True)
             return full.reshape(-1)
 
         def scatter(full):                        # (n_p,) -> (chunk, 1)
@@ -141,7 +240,7 @@ def _unlocalised_shard(xloc, *, m: int, chunk: int, w: int,
                 full.reshape(chunk, m), (0, d), (chunk, 1))
     else:
         def gather(blk):                          # (chunk,) -> (n_p,)
-            return jax.lax.all_gather(blk, axis, axis=0, tiled=True)
+            return jax.lax.all_gather(blk, name, axis=0, tiled=True)
 
         def scatter(full):                        # (n_p,) -> (chunk,)
             return jax.lax.dynamic_slice(full, (d * chunk,), (chunk,))
@@ -162,42 +261,48 @@ def shard_map_sort(x, mesh: Mesh,
                    policy: LocalisationPolicy = LocalisationPolicy(),
                    num_workers: Optional[int] = None,
                    local_sort: LocalSort = "bitonic",
-                   interpret: bool = True, axis: str = AXIS):
+                   interpret: bool = True, axis: Axis = AXIS):
     """Sort a 1-D array with the explicit shard_map engine (traceable)."""
+    axes = axis_tuple(axis)
+    sizes = _axes_sizes(mesh, axes)
     n = x.shape[0]
-    m = mesh.shape[axis]
+    m = math.prod(sizes)
     w = num_workers or m
-    assert (m & (m - 1)) == 0, f"device count {m} not a power of 2"
-    assert w % m == 0 and (w & (w - 1)) == 0, (w, m)
     w_per_dev = w // m
     hash_homed = policy.homing == Homing.HASH_INTERLEAVED
+    hier = policy.outer is not None
+    if hier and len(axes) < 2:
+        raise ValueError(
+            f"hierarchical policy {policy.name!r} needs a (pod, ..., inner) "
+            f"axis tuple, got {axis!r} — use a flat policy on one axis")
 
-    # chunk must split into per-device leaves, and (when relaying out of the
-    # interleaved homing) into one all-to-all block per peer device.
-    granule = m * math.lcm(w_per_dev, m if hash_homed else 1)
+    granule = engine_granule(m, num_workers, hash_homed)
+    check_pad_outside_trace(n, granule, mesh, axes, "shard_map_sort")
     x = pad_to_multiple(x, granule)
     n_p = x.shape[0]
     bounds = chunk_bounds(n_p, m)                  # ownership, paper step 1
     chunk = bounds[0][1] - bounds[0][0]
     assert all(hi - lo == chunk for lo, hi in bounds)
 
+    spec_axis = axes[0] if len(axes) == 1 else axes   # P entry: name | tuple
     if hash_homed:
         # logical element i*m + d sits in row i of device d's column
         xin = x.reshape(chunk, m)
-        in_spec = P(None, axis)
+        in_spec = P(None, spec_axis)
     else:
         xin = x
-        in_spec = P(axis)
+        in_spec = P(spec_axis)
 
     if policy.localised:
         body = partial(_localised_shard, m=m, chunk=chunk,
                        w_per_dev=w_per_dev, hash_homed=hash_homed,
-                       local_sort=local_sort, interpret=interpret, axis=axis)
-        out_spec = P(axis)                         # chunk-contiguous output
+                       local_sort=local_sort, interpret=interpret,
+                       axes=axes, sizes=sizes, hier=hier)
+        out_spec = P(spec_axis)                    # chunk-contiguous output
     else:
         body = partial(_unlocalised_shard, m=m, chunk=chunk, w=w,
                        hash_homed=hash_homed, local_sort=local_sort,
-                       interpret=interpret, axis=axis)
+                       interpret=interpret, axes=axes)
         out_spec = in_spec                         # output stays home-pinned
 
     y = shard_map(body, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
@@ -207,14 +312,81 @@ def shard_map_sort(x, mesh: Mesh,
     return y[:n]
 
 
+def exchange_schedule(n: int, sizes: Sequence[int],
+                      policy: LocalisationPolicy,
+                      num_workers: Optional[int] = None,
+                      itemsize: int = 4) -> List[Dict]:
+    """The engine's exchange plan as per-level byte counts (paper Fig 9).
+
+    `sizes` are the sort-axis sizes in axis order, inner (ICI) last — e.g.
+    (2, 4) for a ("pod", "data") mesh slice.  Returns one record per
+    collective in execution order: ``level`` (0 = relayout, k = merge level
+    k), ``op``, and total ``inter_pod_bytes`` / ``intra_pod_bytes`` moved
+    across all devices — bytes are hardware-independent facts of the
+    schedule, the measurable form of the paper's locality argument.  Must
+    mirror the shard_map bodies above; the structure tests pin them to the
+    lowered HLO's collective counts.
+    """
+    sizes = tuple(sizes)
+    m = math.prod(sizes)
+    m_inner = sizes[-1]
+    n_pods = m // m_inner
+    w = num_workers or m
+    hash_homed = policy.homing == Homing.HASH_INTERLEAVED
+    hier = policy.outer is not None
+    if hier and len(sizes) < 2:
+        raise ValueError(
+            f"hierarchical policy {policy.name!r} needs (pod, ..., inner) "
+            f"axis sizes, got {sizes!r} — same contract as shard_map_sort")
+    granule = engine_granule(m, num_workers, hash_homed)
+    n_p = n + (-n) % granule
+    B = (n_p // m) * itemsize                       # one chunk, in bytes
+    log_inner = m_inner.bit_length() - 1
+    out: List[Dict] = []
+
+    def rec(level, op, inter, intra):
+        out.append({"level": level, "op": op,
+                    "inter_pod_bytes": inter, "intra_pod_bytes": intra})
+
+    if not policy.localised:
+        # leaf gather + one full gather per merge level: every device
+        # re-reads everything it doesn't hold, at every level.
+        for lvl in range(w.bit_length()):
+            rec(lvl, "all_gather",
+                m * (m - m_inner) * B, m * (m_inner - 1) * B)
+        return out
+
+    if hash_homed:
+        # one-shot relayout: each device sends m-1 of its m chunk-blocks
+        rec(0, "all_to_all",
+            m * (m - m_inner) * (B // m), m * (m_inner - 1) * (B // m))
+    for i in range(m.bit_length() - 1):
+        j0 = i
+        if hier and i >= log_inner:
+            rec(i + 1, "all_gather", m * (n_pods - 1) * B, 0)
+            j0 = log_inner - 1
+        for j in range(j0, -1, -1):
+            cross = (1 << j) >= m_inner
+            rec(i + 1, "ppermute", m * B if cross else 0,
+                0 if cross else m * B)
+    return out
+
+
 def make_engine_fn(mesh: Optional[Mesh], policy: LocalisationPolicy,
                    num_workers: Optional[int] = None,
                    local_sort: LocalSort = "bitonic",
-                   interpret: bool = True, axis: str = AXIS):
+                   interpret: bool = True, axis: Axis = AXIS):
     """Jitted engine sort for one Table-1 case; input donated (step 5)."""
+    from repro.core.sort import sort_entry          # local: avoid cycle
     if mesh is None:
-        mesh = jax.make_mesh((len(jax.devices()),), (axis,))
+        a = axis if isinstance(axis, str) else axis[-1]
+        mesh = jax.make_mesh((len(jax.devices()),), (a,))
+        axis = a
+    axes = axis_tuple(axis)
+    m = math.prod(_axes_sizes(mesh, axes))
+    hash_homed = policy.homing == Homing.HASH_INTERLEAVED
+    granule = engine_granule(m, num_workers, hash_homed)
     fn = partial(shard_map_sort, mesh=mesh, policy=policy,
                  num_workers=num_workers, local_sort=local_sort,
                  interpret=interpret, axis=axis)
-    return jax.jit(fn, donate_argnums=(0,))
+    return sort_entry(jax.jit(fn, donate_argnums=(0,)), granule)

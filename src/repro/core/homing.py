@@ -21,11 +21,18 @@ These are the layout *mechanics*; the public surface is `repro.core.api`:
 from __future__ import annotations
 
 import enum
+import math
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
+
+# A placement axis: one mesh axis name, or a tuple of names linearised
+# row-major (the hierarchical case — e.g. ("pod", "data"): pod-major device
+# order, so device d = pod * n_data + data_index owns logical chunk d).
+Axis = Union[str, Tuple[str, ...]]
 
 
 class Homing(enum.Enum):
@@ -33,11 +40,20 @@ class Homing(enum.Enum):
     HASH_INTERLEAVED = "hash"
 
 
-def chunked_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+def axis_tuple(axis: Axis) -> Tuple[str, ...]:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def axis_size(mesh: Mesh, axis: Axis) -> int:
+    """#devices along `axis` — the product over a tuple of mesh axes."""
+    return math.prod(mesh.shape[a] for a in axis_tuple(axis))
+
+
+def chunked_sharding(mesh: Mesh, axis: Axis = "data") -> NamedSharding:
     return NamedSharding(mesh, P(axis))
 
 
-def interleaved_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+def interleaved_sharding(mesh: Mesh, axis: Axis = "data") -> NamedSharding:
     return NamedSharding(mesh, P(None, axis))
 
 
@@ -56,11 +72,11 @@ def check_divisible(n: int, N: int, homing: Homing, axis: str) -> None:
             f"pad=True to Locale.put")
 
 
-def to_layout(x, mesh: Mesh, homing: Homing, axis: str = "data"):
+def to_layout(x, mesh: Mesh, homing: Homing, axis: Axis = "data"):
     """Place a 1-D array under the given homing (outside jit)."""
     n = x.shape[0]
-    N = mesh.shape[axis]
-    check_divisible(n, N, homing, axis)
+    N = axis_size(mesh, axis)
+    check_divisible(n, N, homing, str(axis))
     if homing == Homing.LOCAL_CHUNKED:
         return jax.device_put(x, chunked_sharding(mesh, axis))
     return jax.device_put(x.reshape(n // N, N), interleaved_sharding(mesh, axis))
@@ -73,15 +89,15 @@ def logical_view(x_placed, homing: Homing):
     return x_placed.reshape(-1)  # (n/N, N) row-major == logical order
 
 
-def constrain(x, mesh: Mesh, homing: Homing, axis: str = "data"):
+def constrain(x, mesh: Mesh, homing: Homing, axis: Axis = "data"):
     """Sharding constraint form, for use inside jit."""
     if mesh is None:
         return x
     if homing == Homing.LOCAL_CHUNKED:
         return jax.lax.with_sharding_constraint(x, chunked_sharding(mesh, axis))
     n = x.shape[0]
-    N = mesh.shape[axis]
-    check_divisible(n, N, homing, axis)
+    N = axis_size(mesh, axis)
+    check_divisible(n, N, homing, str(axis))
     y = x.reshape(n // N, N)
     y = jax.lax.with_sharding_constraint(y, interleaved_sharding(mesh, axis))
     return y.reshape(n)

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.homing import Homing, chunked_sharding, constrain
+from repro.core.homing import Axis, Homing, chunked_sharding, constrain
 
 
 def chunk_bounds(n: int, m: int) -> Tuple[Tuple[int, int], ...]:
@@ -36,19 +36,62 @@ def chunk_bounds(n: int, m: int) -> Tuple[Tuple[int, int], ...]:
 
 @dataclass(frozen=True)
 class LocalisationPolicy:
-    """The three building blocks, as independently switchable knobs."""
+    """The three building blocks, as independently switchable knobs.
+
+    `outer` is the DCN-aware fourth knob for hierarchical (pod, data) meshes:
+    ``None`` treats the sort axes as one flat device space; ``"hash"`` /
+    ``"replicate"`` confine the deep merge-split levels to intra-pod
+    neighbour exchanges and run each top (cross-pod) merge level as a single
+    ``all_gather`` over the pod axis, with the cross-pod merge-split work
+    replicated per pod — data ownership never migrates across the slow link.
+    """
     localised: bool = True        # copy chunks into locally-homed buffers
     static_mapping: bool = True   # explicit layouts vs compiler-chosen
     homing: Homing = Homing.LOCAL_CHUNKED
+    outer: Optional[str] = None   # None = flat; "hash" | "replicate"
+
+    OUTER_MODES = (None, "hash", "replicate")
+
+    def __post_init__(self):
+        if self.outer not in self.OUTER_MODES:
+            raise ValueError(f"unknown outer mode {self.outer!r}; "
+                             f"want one of {self.OUTER_MODES}")
+        if self.outer is not None and not self.localised:
+            raise ValueError(
+                "outer={!r} needs localised=True — the hierarchical engine "
+                "is the localised path's merge-split network; non-localised "
+                "gathers everything every level regardless".format(self.outer))
+
+    @classmethod
+    def hierarchical(cls, inner: str = "localised",
+                     outer: str = "hash") -> "LocalisationPolicy":
+        """The two-distance-class policy for (pod, data) meshes.
+
+        ``inner`` is the intra-pod discipline: ``"localised"`` starts from
+        chunk-contiguous input (each pod owns a contiguous segment, each
+        device its chunk — no relayout), ``"hash"`` starts element-interleaved
+        across all devices and pays the one-shot all_to_all relayout first.
+        ``outer`` picks how the top log2(n_pods) merge levels cross pods
+        (see the class docstring); both modes currently share the
+        gather-and-replicate engine path.
+        """
+        if inner not in ("localised", "hash"):
+            raise ValueError(f"unknown inner mode {inner!r}; "
+                             f"want 'localised' or 'hash'")
+        homing = (Homing.LOCAL_CHUNKED if inner == "localised"
+                  else Homing.HASH_INTERLEAVED)
+        return cls(localised=True, static_mapping=True, homing=homing,
+                   outer=outer)
 
     @property
     def name(self) -> str:
-        return (f"{'loc' if self.localised else 'nonloc'}-"
+        hier = f"hier.{self.outer}-" if self.outer else ""
+        return (f"{hier}{'loc' if self.localised else 'nonloc'}-"
                 f"{'static' if self.static_mapping else 'auto'}-"
                 f"{self.homing.value}")
 
 
-def localise(x, mesh: Optional[Mesh], axis: str = "data"):
+def localise(x, mesh: Optional[Mesh], axis: Axis = "data"):
     """One-shot reshard into the chunk-contiguous locally-homed layout."""
     if mesh is None:
         return x
@@ -56,7 +99,7 @@ def localise(x, mesh: Optional[Mesh], axis: str = "data"):
 
 
 def place(x, mesh: Optional[Mesh], policy: LocalisationPolicy,
-          axis: str = "data"):
+          axis: Axis = "data"):
     """Layout an intermediate value according to the policy (inside jit).
 
     - static+localised: chunk-contiguous (the technique).

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.core.homing import Homing, constrain
+from repro.core.homing import Axis, Homing, constrain
 from repro.core.localisation import LocalisationPolicy, localise
 
 
@@ -29,7 +29,7 @@ def _pass(y):
 
 
 def repetitive_copy(x, reps: int, mesh: Optional[Mesh],
-                    policy: LocalisationPolicy, axis: str = "data"):
+                    policy: LocalisationPolicy, axis: Axis = "data"):
     """R passes over a 1-D array under the policy. Returns the output array."""
     static = mesh is not None and policy.static_mapping
     if policy.localised:
@@ -64,6 +64,6 @@ def reference(x, reps: int):
 
 
 def make_microbench_fn(mesh, policy: LocalisationPolicy, reps: int,
-                       axis: str = "data"):
+                       axis: Axis = "data"):
     return jax.jit(partial(repetitive_copy, reps=reps, mesh=mesh,
                            policy=policy, axis=axis), donate_argnums=(0,))

@@ -48,7 +48,13 @@ class SyntheticLM:
 
     @property
     def locale(self) -> Locale:
-        """Batch rows chunk-contiguous over the data-parallel axes."""
+        """Batch rows chunk-contiguous over the data-parallel axes.
+
+        Mesh order is preserved, so on a (pod, data, model) mesh the axis
+        tuple is ("pod", "data") — pod-major, matching the hierarchical
+        engine's device linearisation: a pod's batch rows are contiguous
+        and never born across the DCN boundary.
+        """
         if self.mesh is None:
             return Locale(mesh=None)
         dp = tuple(a for a in self.mesh.axis_names if a != "model")

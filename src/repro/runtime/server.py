@@ -50,10 +50,14 @@ class DecodeServer:
         self.greedy = greedy
         if locale is None:
             # home cache slots over the plan's batch axes; degenerate
-            # (no-op) locale when the plan has no mesh or no batch sharding
-            slot_axes = plan.batch_axes if plan.mesh is not None else None
-            locale = Locale(mesh=plan.mesh if slot_axes else None,
-                            axis=slot_axes or "data")
+            # (no-op) locale when the plan has no mesh or no batch sharding.
+            # batch_axes is a *tuple* of mesh axis names (("data",) or
+            # ("pod", "data")) — pass it through as the locale's (possibly
+            # multi-) axis, never coerced to a single axis string.
+            slot_axes = (tuple(plan.batch_axes or ())
+                         if plan.mesh is not None else ())
+            locale = (Locale(mesh=plan.mesh, axis=slot_axes)
+                      if slot_axes else Locale(mesh=None))
         self.locale = locale
 
         def _step(p, c, b, pos):

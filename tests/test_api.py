@@ -189,6 +189,49 @@ def test_microbench_auto_policy_emits_no_constraints():
 
 
 # ---------------------------------------------------------------------------
+# multi-axis locales: Locale(mesh, axis=("pod", "data")) end-to-end
+# ---------------------------------------------------------------------------
+def _pod_mesh1():
+    """A (1,1,1)-shape (pod, data, model) mesh: the multi-axis *type* paths
+    on the single test-process device; real pod shapes run in the slow
+    subprocess tests."""
+    return jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+
+
+def test_multi_axis_locale_placement_roundtrips():
+    for homing in (Homing.LOCAL_CHUNKED, Homing.HASH_INTERLEAVED):
+        loc = Locale(mesh=_pod_mesh1(), axis=("pod", "data"),
+                     policy=LocalisationPolicy(homing=homing))
+        assert loc.axis_size == 1
+        x = jnp.arange(24, dtype=jnp.int32)
+        h = loc.put(x)
+        assert h.homing == homing and h.axis == ("pod", "data")
+        np.testing.assert_array_equal(np.asarray(h.logical()), np.arange(24))
+        # pin accepts both raw arrays and Homed under the tuple axis
+        pinned = jax.jit(lambda v: loc.pin(v))(x)
+        np.testing.assert_array_equal(np.asarray(pinned), np.arange(24))
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(lambda v: loc.localise(v))(x)), np.arange(24))
+
+
+def test_multi_axis_locale_make_and_workloads():
+    loc = Locale(mesh=_pod_mesh1(), axis=("pod", "data"))
+    born = loc.make((8, 2), lambda idx: np.ones((8, 2), np.float32)[idx])
+    assert born.shape == (8, 2)
+    x = jax.random.randint(jax.random.key(0), (513,), -10**6, 10**6,
+                           dtype=jnp.int32)
+    expect = np.sort(np.asarray(x))
+    for backend in ("constraint", "shard_map"):
+        fn = loc.workload("sort", backend=backend, num_workers=8,
+                          local_sort=jnp.sort)
+        np.testing.assert_array_equal(np.asarray(fn(jnp.array(x))), expect,
+                                      err_msg=backend)
+    mb = loc.workload("microbench", reps=2)
+    out = mb(jnp.linspace(0, 1, 16))
+    assert out.shape == (16,)
+
+
+# ---------------------------------------------------------------------------
 # deprecation shims
 # ---------------------------------------------------------------------------
 def test_free_function_shims_warn_and_delegate():
@@ -206,6 +249,59 @@ def test_free_function_shims_warn_and_delegate():
     assert len(w) == 4
     assert all(issubclass(r.category, DeprecationWarning) for r in w)
     assert "Locale.localise" in str(w[0].message)
+
+
+def test_every_shim_warns_and_matches_api_bit_identical():
+    """Each deprecated free function must (a) warn and (b) return results
+    bit-identical to the `Locale`/`Homed` path, so the migration can't rot."""
+    import repro.core as core
+    mesh = _mesh1()
+    x = jnp.arange(16, dtype=jnp.int32)
+    xf = jnp.linspace(0.0, 1.0, 16)
+    pol = LocalisationPolicy()
+    loc = Locale(mesh=mesh, policy=pol)
+    hash_loc = Locale(mesh=mesh,
+                      policy=LocalisationPolicy(homing=Homing.HASH_INTERLEAVED))
+
+    def shim(name, *args, **kw):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out = getattr(core, name)(*args, **kw)
+        assert len(w) == 1 and issubclass(w[0].category, DeprecationWarning), \
+            (name, [str(r.message) for r in w])
+        return out
+
+    # to_layout == Locale.put(...).data, both homings
+    for l in (loc, hash_loc):
+        old = shim("to_layout", x, mesh, l.policy.homing)
+        np.testing.assert_array_equal(np.asarray(old),
+                                      np.asarray(l.put(x).data))
+    # logical_view == Homed.logical
+    h = hash_loc.put(x)
+    np.testing.assert_array_equal(
+        np.asarray(shim("logical_view", h.data, h.homing)),
+        np.asarray(h.logical()))
+    # constrain / place / localise == Locale.pin / Locale.localise (in jit)
+    for name, args, api in [
+            ("constrain", (xf, mesh, pol.homing), lambda v: loc.pin(v)),
+            ("place", (xf, mesh, pol), lambda v: loc.pin(v)),
+            ("localise", (xf, mesh), lambda v: loc.localise(v))]:
+        np.testing.assert_array_equal(np.asarray(shim(name, *args)),
+                                      np.asarray(jax.jit(api)(xf)))
+    # make_*_fn == Locale.workload(...)
+    expect = np.asarray(loc.workload("sort", num_workers=8)(jnp.array(x)))
+    np.testing.assert_array_equal(
+        np.asarray(shim("make_sort_fn", mesh, pol, num_workers=8)(
+            jnp.array(x))), expect)
+    expect = np.asarray(loc.workload("engine", num_workers=8,
+                                     local_sort=jnp.sort)(jnp.array(x)))
+    np.testing.assert_array_equal(
+        np.asarray(shim("make_engine_fn", mesh, pol, num_workers=8,
+                        local_sort=jnp.sort)(jnp.array(x))), expect)
+    expect = np.asarray(loc.workload("microbench", reps=3)(jnp.array(xf)))
+    np.testing.assert_array_equal(
+        np.asarray(shim("make_microbench_fn", mesh, pol, 3)(jnp.array(xf))),
+        expect)
 
 
 # ---------------------------------------------------------------------------
@@ -257,6 +353,7 @@ def test_benchmarks_smoke_emits_json(tmp_path):
         env={**os.environ, "PYTHONPATH": "src"})
     assert r.returncode == 0, r.stdout + r.stderr
     import json
+    import re
     sort = json.load(open(tmp_path / "BENCH_sort.json"))
     micro = json.load(open(tmp_path / "BENCH_microbench.json"))
     assert sort and micro, (sort, micro)
@@ -264,3 +361,15 @@ def test_benchmarks_smoke_emits_json(tmp_path):
     assert timed and all(rec["us"] > 0 for rec in timed)
     assert {rec["backend"] for rec in sort} >= {"constraint"}
     assert any(rec["n"] for rec in sort)
+    # the --pods grid ran too: BENCH_engine.json carries the per-policy
+    # inter/intra-pod exchange-byte totals, and the hierarchical policy
+    # moves strictly fewer inter-pod bytes than the flat non-localised path
+    engine = json.load(open(tmp_path / "BENCH_engine.json"))
+
+    def inter_total(prefix):
+        recs = [r for r in engine
+                if prefix in r["name"] and "inter_total=" in r["derived"]]
+        assert len(recs) == 1, (prefix, engine)
+        return int(re.search(r"inter_total=(\d+)", recs[0]["derived"]).group(1))
+
+    assert inter_total("_hier.") < inter_total("_nonloc-")

@@ -101,6 +101,57 @@ def test_supervisor_relaunches_after_crash(tmp_path):
 
 
 @pytest.mark.slow
+def test_decode_server_homes_slots_on_multi_device_mesh():
+    """Satellite regression: the server's slot-homing locale must carry the
+    plan's batch axes as a *tuple* axis (it used to pass the raw list where
+    an axis name was expected) and serve identically to the no-mesh server
+    on a real >=2-device mesh."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np
+import jax
+from repro.configs import get_config, reduce_config
+from repro.configs.base import ShapeSpec
+from repro.models.model import LM
+from repro.runtime.server import DecodeServer, Request
+from repro.sharding.partition import make_plan
+from repro.launch.mesh import make_host_mesh
+
+cfg = reduce_config(get_config("qwen3-0.6b"))
+model = LM(cfg)
+params = model.init(jax.random.key(42))
+mesh = make_host_mesh(n_data=2, n_model=1)
+plan = make_plan(mesh, cfg, ShapeSpec("d", 64, 4, "decode"))
+assert plan.batch_axes == ("data",), plan.batch_axes
+
+def serve(plan_):
+    srv = DecodeServer(cfg, params, batch_slots=4, max_len=64, plan=plan_)
+    for i in range(4):
+        srv.submit(Request(rid=i, prompt=np.asarray([3 + i, 5, 7], np.int32),
+                           max_new=4))
+    return srv, [r.out for r in srv.run()]
+
+srv, outs = serve(plan)
+# the locale carries the batch axes tuple over the real mesh
+assert srv.locale.mesh is mesh and srv.locale.axis == ("data",), \\
+    (srv.locale.mesh, srv.locale.axis)
+assert srv.locale.axis_size == 2
+# and slot-homed serving decodes the same tokens as the unplanned server
+from repro.sharding.partition import NULL_PLAN
+_, outs_ref = serve(NULL_PLAN)
+assert outs == outs_ref, (outs, outs_ref)
+print("SERVER_SLOTS_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "SERVER_SLOTS_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
 def test_decode_server_greedy_matches_manual(tmp_path):
     cfg, model, params = build("qwen3-0.6b")
     srv = DecodeServer(cfg, params, batch_slots=2, max_len=64)
