@@ -33,7 +33,8 @@ def rows(outdir=OUTDIR, pattern="*.json"):
         }
 
 
-def main():
+def main(argv=None):
+    del argv                  # uniform LOCAL-bench signature (benchmarks.run)
     print("name,us_per_call,derived")
     for r in rows():
         name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"

@@ -9,7 +9,10 @@ hint tree; ``--backend shard_map`` measures the explicit execution engine
 ``--local-sort`` picks the engine's per-device leaf sort: ``jnp`` (default
 here — the Pallas kernel only *interprets* on CPU, drowning the collective
 signal) or ``bitonic`` (the VMEM-resident kernel, the TPU configuration).
-``--logn`` scales the input (smoke runs use a small one).
+``--local-phase`` picks the engine's local-phase implementation: ``auto``
+(default: follows --local-sort), ``pallas`` (fused VMEM-resident
+local_sort + kept-half merge_split kernels) or ``reference`` (the jnp
+oracle).  ``--logn`` scales the input (smoke runs use a small one).
 
 ``--pods PxD[xM]`` switches to the hierarchical grid instead: an
 emulated-pod (pod, data, model) mesh, the engine run for the hierarchical
@@ -48,7 +51,7 @@ def _structure(fn, n):
 
 
 def run_grid(locale, n_dev: int, backend: str, local_sort, t_base: float,
-             n: int, cases=None):
+             n: int, cases=None, local_phase=None):
     for num, c in sorted(CASES.items()):
         if cases and num not in cases:
             continue
@@ -57,7 +60,8 @@ def run_grid(locale, n_dev: int, backend: str, local_sort, t_base: float,
                                  homing=Homing(c.homing))
         fn = locale.with_policy(pol).workload(
             "sort", backend=backend, local_sort=local_sort,
-            num_workers=n_dev if n_dev > 1 else 8)
+            num_workers=n_dev if n_dev > 1 else 8,
+            local_phase=local_phase if backend == "shard_map" else None)
         t = timeit(lambda: fn(fresh(n)))
         by, coll = _structure(fn, n)
         print(f"sort_{backend}_n{n}_case{num}_{pol.name},{t:.0f},"
@@ -75,7 +79,7 @@ def pod_policies():
                                                           # level crosses DCN
 
 
-def run_pods(pods: str, logn: int, local_sort):
+def run_pods(pods: str, logn: int, local_sort, local_phase=None):
     """Hierarchical engine grid on an emulated-pod mesh (--pods PxD[xM])."""
     try:
         dims = [int(d) for d in pods.split("x")]
@@ -94,25 +98,46 @@ def run_pods(pods: str, logn: int, local_sort):
     sizes = (n_pods, n_data)
     for pol in pod_policies():
         fn = locale.with_policy(pol).workload("sort", backend="shard_map",
-                                              local_sort=local_sort)
+                                              local_sort=local_sort,
+                                              local_phase=local_phase)
         t = timeit(lambda: fn(fresh(n)))
-        sched = exchange_schedule(n, sizes, pol)
+        # per-record pricing must reflect the phase the timed engine ran
+        # (auto resolves by local_sort, exactly as the engine does)
+        from repro.core.engine import resolve_local_phase
+        phase = resolve_local_phase(local_phase, local_sort)
+        sched = exchange_schedule(n, sizes, pol, local_phase=phase)
         inter = sum(r["inter_pod_bytes"] for r in sched)
         intra = sum(r["intra_pod_bytes"] for r in sched)
+        # price the local phase under BOTH implementations: the schedule is
+        # the analytic form of the fused-kernel argument, next to the
+        # exchange-locality one
+        hbm = {ph: sum(r["local_hbm_bytes"]
+                       for r in exchange_schedule(n, sizes, pol,
+                                                  local_phase=ph))
+               for ph in ("pallas", "reference")}
         print(f"engine_{tag}_{pol.name},{t:.0f},"
-              f"inter_total={inter};intra_total={intra};n={n}")
+              f"inter_total={inter};intra_total={intra};"
+              f"local_hbm_pallas={hbm['pallas']};"
+              f"local_hbm_reference={hbm['reference']};n={n}")
         for k, r in enumerate(sched):
             print(f"engine_{tag}_{pol.name}_x{k},,"
                   f"level={r['level']};op={r['op']};"
-                  f"inter={r['inter_pod_bytes']};intra={r['intra_pod_bytes']}")
+                  f"inter={r['inter_pod_bytes']};intra={r['intra_pod_bytes']};"
+                  f"hbm={r['local_hbm_bytes']};"
+                  f"elems={r['local_merge_elems']}")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=BACKENDS + ("both",),
                     default="constraint")
-    ap.add_argument("--local-sort", choices=("jnp", "bitonic"), default="jnp",
-                    help="engine leaf sort (bitonic = Pallas kernel)")
+    ap.add_argument("--local-sort", choices=("jnp", "bitonic"), default=None,
+                    help="engine leaf sort (bitonic = Pallas kernel; default "
+                         "jnp, or bitonic under --local-phase pallas)")
+    ap.add_argument("--local-phase", choices=("auto", "pallas", "reference"),
+                    default="auto",
+                    help="engine local-phase implementation (auto follows "
+                         "--local-sort)")
     ap.add_argument("--logn", type=int, default=21,
                     help="log2 input size (2M int32 default, scaled from the "
                          "paper's 100M for the CPU harness)")
@@ -122,10 +147,17 @@ def main(argv=None):
                     help="run the hierarchical multi-pod engine grid on an "
                          "emulated (pod, data, model) mesh instead")
     args = ap.parse_args(argv)
-    local_sort = jnp.sort if args.local_sort == "jnp" else "bitonic"
+    local_phase = None if args.local_phase == "auto" else args.local_phase
+    if args.local_sort == "jnp" and local_phase == "pallas":
+        raise SystemExit("--local-sort jnp conflicts with --local-phase "
+                         "pallas: the fused kernel has no callable leaf sort")
+    if args.local_sort is None:         # default leaf follows the phase
+        local_sort = "bitonic" if local_phase == "pallas" else jnp.sort
+    else:
+        local_sort = jnp.sort if args.local_sort == "jnp" else "bitonic"
     if args.pods:
         print("name,us_per_call,derived")
-        run_pods(args.pods, args.logn, local_sort)
+        run_pods(args.pods, args.logn, local_sort, local_phase)
         return
     n = 1 << args.logn
     n_dev = len(jax.devices())
@@ -142,7 +174,7 @@ def main(argv=None):
     for backend in backends:
         run_grid(locale, n_dev, backend,
                  local_sort if backend == "shard_map" else None, t_base,
-                 n, args.cases)
+                 n, args.cases, local_phase)
 
 
 if __name__ == "__main__":

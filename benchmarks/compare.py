@@ -1,0 +1,77 @@
+"""Diff two ``BENCH_*.json`` files — the CI-ready perf regression gate.
+
+``python -m benchmarks.compare BASE.json NEW.json [--fail-above PCT]``
+
+Prints one CSV row per case present in both files with the wall-clock
+delta (positive = NEW is slower = regression) and the speedup factor, a
+``# only-in-...`` comment line per case that appears in exactly one file
+(renamed/dropped benches never vanish silently), and a summary line.  With
+``--fail-above PCT`` the exit code is 1 when any case regresses by more
+than PCT percent — wire it between a committed baseline and a fresh
+``benchmarks/run.py`` run to gate a PR.
+
+Structure-only records (``us == null``: HLO byte counts, exchange-schedule
+rows) carry no wall-clock and are skipped.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+
+def load(path: str) -> Dict[str, float]:
+    """name -> us for every timed record (structure-only rows dropped)."""
+    with open(path) as f:
+        records = json.load(f)
+    return {r["name"]: r["us"] for r in records if r.get("us") is not None}
+
+
+def compare(base: Dict[str, float], new: Dict[str, float]) -> List[Dict]:
+    """Per-case rows, sorted worst regression first."""
+    rows = []
+    for name in base.keys() & new.keys():
+        b, n = base[name], new[name]
+        rows.append({
+            "name": name, "base_us": b, "new_us": n,
+            "delta_pct": (n - b) / b * 100.0 if b else float("inf"),
+            "speedup": b / n if n else float("inf"),
+        })
+    return sorted(rows, key=lambda r: -r["delta_pct"])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json files; exit 1 on regression")
+    ap.add_argument("base", help="baseline BENCH_*.json (e.g. committed)")
+    ap.add_argument("new", help="candidate BENCH_*.json (e.g. fresh run)")
+    ap.add_argument("--fail-above", type=float, default=None, metavar="PCT",
+                    help="exit 1 if any case regresses by more than PCT%%")
+    args = ap.parse_args(argv)
+    base, new = load(args.base), load(args.new)
+    rows = compare(base, new)
+    print("name,base_us,new_us,delta_pct,speedup")
+    for r in rows:
+        print(f"{r['name']},{r['base_us']:.0f},{r['new_us']:.0f},"
+              f"{r['delta_pct']:+.1f},{r['speedup']:.2f}x")
+    for name in sorted(base.keys() - new.keys()):
+        print(f"# only-in-base: {name}")
+    for name in sorted(new.keys() - base.keys()):
+        print(f"# only-in-new: {name}")
+    if not rows:
+        print("# no common timed cases", file=sys.stderr)
+        return 2
+    worst = rows[0]
+    print(f"# {len(rows)} common cases; worst delta "
+          f"{worst['delta_pct']:+.1f}% ({worst['name']})")
+    if args.fail_above is not None and worst["delta_pct"] > args.fail_above:
+        bad = [r["name"] for r in rows if r["delta_pct"] > args.fail_above]
+        print(f"# FAIL: {len(bad)} case(s) regressed more than "
+              f"{args.fail_above:.1f}%: {', '.join(bad)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

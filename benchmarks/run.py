@@ -1,11 +1,14 @@
 """Benchmark harness — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and writes machine-readable
-``BENCH_sort.json`` / ``BENCH_microbench.json`` (one record per case:
-name, n, median wall-clock in us, backend, derived) so the perf trajectory
-is tracked across PRs. Distributed benchmarks run in subprocesses with 8
-placeholder host devices (the main process keeps the single real device,
-mirroring the dry-run discipline).
+``BENCH_sort.json`` / ``BENCH_microbench.json`` / ``BENCH_engine.json`` /
+``BENCH_kernels.json`` (one record per case: name, n, median wall-clock in
+us, backend, derived) so the perf trajectory is tracked across PRs
+(``benchmarks/compare.py`` diffs two runs).  Distributed benchmarks run in
+subprocesses with 8 placeholder host devices (the main process keeps the
+single real device, mirroring the dry-run discipline); the LOCAL benches
+run in-process with their stdout captured so their CSV reaches
+`parse_records` too.
 
 ``--smoke`` runs every entry point at toy sizes on 2 placeholder devices —
 fast enough for the test suite, so the benchmark surface can't silently rot.
@@ -13,6 +16,8 @@ fast enough for the test suite, so the benchmark surface can't silently rot.
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
 import json
 import os
 import re
@@ -50,6 +55,8 @@ SMOKE_ARGS = {
     "bench_sort_pods": ["--pods", "2x1", "--logn", "10"],
     "bench_sort_sizes": ["--logns", "12"],
     "bench_striping": ["--logn", "14"],
+    "bench_kernels": ["--only", "local,merge", "--chunks", "2",
+                      "--logcs", "8"],
 }
 
 # json targets: which CSV prefixes land in which BENCH_*.json
@@ -57,6 +64,7 @@ JSON_FILES = {
     "BENCH_sort.json": ("sort_",),
     "BENCH_microbench.json": ("microbench_",),
     "BENCH_engine.json": ("engine_",),
+    "BENCH_kernels.json": ("kernel_",),
 }
 
 
@@ -99,6 +107,38 @@ def write_json(records, out_dir: str) -> None:
         print(f"# wrote {path} ({len(rows)} records)", flush=True)
 
 
+class _Tee(io.TextIOBase):
+    """Write-through to several sinks: capture without losing streaming."""
+
+    def __init__(self, *sinks):
+        self.sinks = sinks
+
+    def write(self, s):
+        for sink in self.sinks:
+            sink.write(s)
+        return len(s)
+
+    def flush(self):
+        for sink in self.sinks:
+            sink.flush()
+
+
+def run_local(mod: str, args=None) -> str:
+    """Run a single-process benchmark module, returning its captured CSV.
+
+    The LOCAL benches print from ``main()`` in-process; without capture
+    their rows never reached `parse_records`/`write_json` — BENCH_kernels
+    stayed empty no matter what ran.  Output still streams to the real
+    stdout as it is produced (interpret-mode sweeps take minutes; a silent
+    harness reads as hung).
+    """
+    m = __import__(f"benchmarks.{mod}", fromlist=["main"])
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(_Tee(sys.stdout, buf)):
+        m.main(args or [])
+    return buf.getvalue()
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -121,8 +161,9 @@ def main(argv=None) -> None:
     if not args.skip_local:
         for mod, desc in LOCAL:
             print(f"# === {mod}: {desc} ===", flush=True)
-            m = __import__(f"benchmarks.{mod}", fromlist=["main"])
-            m.main()
+            out = run_local(mod, SMOKE_ARGS.get(mod, []) if args.smoke
+                            else FULL_ARGS.get(mod, []))
+            records += parse_records(out)
     write_json(records, args.out)
 
 

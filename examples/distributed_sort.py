@@ -47,14 +47,16 @@ def main():
             print(f"{backend:10s} case {num} ({pol.name:22s}): "
                   f"{dt*1e3:8.1f} ms  sorted=True")
 
-    # the engine end-to-end with its real local phase: the Pallas bitonic
-    # kernel running inside each shard (VMEM-resident sort, Algorithm 2)
+    # the engine end-to-end with its real local phase: ONE fused pallas_call
+    # per chunk (leaf sorts + the whole local merge tree in VMEM) and
+    # merge-path merge-splits that compute only the kept half (Algorithm 2
+    # for the entire local phase — local_phase="pallas", the default)
     x = jax.random.randint(jax.random.key(1), (1 << 12,), 0, 1 << 30,
                            dtype=jnp.int32)
-    fn = locale.workload("engine")
+    fn = locale.workload("engine", local_phase="pallas")
     y = jax.block_until_ready(fn(x))
     assert bool(jnp.all(y[1:] >= y[:-1]))
-    print("shard_map engine + pallas bitonic local sort: ok (interpret mode)")
+    print("shard_map engine + fused pallas local phase: ok (interpret mode)")
 
     # two distance classes: an emulated (pod, data, model) mesh, the deep
     # merge-split levels confined to intra-pod ppermutes and ONE all_gather
@@ -71,12 +73,19 @@ def main():
         assert bool(jnp.all(y[1:] >= y[:-1]))
         print(f"hierarchical engine on 2x{n_dev // 2} emulated pods: ok")
 
-    # the kernel standalone
+    # the kernels standalone: leaf-only bitonic, the fused local phase
+    # (non-power-of-two rows pad in VMEM scratch, never in HBM), and the
+    # kept-half-only merge split
     xs = jax.random.randint(jax.random.key(1), (8, 512), 0, 1 << 30,
                             dtype=jnp.int32)
     ys = ops.bitonic_sort(xs)
     assert bool(jnp.all(ys[:, 1:] >= ys[:, :-1]))
-    print("pallas bitonic local sort: ok (interpret mode)")
+    zs = ops.local_sort(jax.random.randint(jax.random.key(3), (4, 384),
+                                           0, 1 << 30, dtype=jnp.int32))
+    assert bool(jnp.all(zs[:, 1:] >= zs[:, :-1]))
+    lo = ops.merge_split(ys[:4], ys[4:], jnp.ones((4,), bool))
+    assert bool(jnp.all(lo[:, 1:] >= lo[:, :-1]))
+    print("pallas kernels (bitonic / fused local_sort / merge_split): ok")
 
 
 if __name__ == "__main__":

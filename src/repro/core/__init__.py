@@ -32,7 +32,8 @@ from repro.core.homing import Homing, check_divisible
 from repro.core.localisation import LocalisationPolicy, chunk_bounds
 from repro.core.sort import (BACKENDS, check_nan_free, distributed_merge_sort,
                              merge_sorted, pad_to_multiple, pad_value)
-from repro.core.engine import exchange_schedule, shard_map_sort
+from repro.core.engine import (LOCAL_PHASES, exchange_schedule,
+                               shard_map_sort)
 from repro.core.microbench import repetitive_copy
 
 
@@ -67,7 +68,8 @@ __all__ = ["Locale", "Homed", "register_workload",
            "LocalisationPolicy", "chunk_bounds",
            "BACKENDS", "check_nan_free", "distributed_merge_sort",
            "merge_sorted", "pad_to_multiple", "pad_value",
-           "exchange_schedule", "shard_map_sort", "repetitive_copy",
+           "LOCAL_PHASES", "exchange_schedule", "shard_map_sort",
+           "repetitive_copy",
            # deprecated shims
            "to_layout", "constrain", "logical_view", "localise", "place",
            "make_sort_fn", "make_engine_fn", "make_microbench_fn"]

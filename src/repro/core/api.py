@@ -284,18 +284,24 @@ class Locale:
 # ---------------------------------------------------------------------------
 @register_workload("sort")
 def _sort_workload(locale: Locale, *, backend: str = "constraint",
-                   num_workers=None, local_sort=None, interpret: bool = True):
+                   num_workers=None, local_sort=None, interpret: bool = True,
+                   local_phase: str = None):
     """The paper's validation app: distributed merge sort (Algorithms 1-3).
 
     A tuple locale axis (e.g. ("pod", "data")) selects the two-distance-class
     engine: intra-pod neighbour ppermutes on the fast inner axis, cross-pod
     exchanges per ``policy.outer`` (see `LocalisationPolicy.hierarchical`).
+
+    ``local_phase`` (engine backend) picks the per-device compute:
+    "pallas" — the VMEM-resident production path (ONE fused kernel for leaf
+    sorts + local merge tree, merge-path merge-splits that compute only the
+    kept half); "reference" — the jnp oracle; None — auto by ``local_sort``.
     """
     from repro.core.sort import make_sort_fn
     axis = locale.axis if locale.mesh is not None else "data"
     return make_sort_fn(locale.mesh, locale.policy, num_workers=num_workers,
                         local_sort=local_sort, backend=backend, axis=axis,
-                        interpret=interpret)
+                        interpret=interpret, local_phase=local_phase)
 
 
 @register_workload("engine")

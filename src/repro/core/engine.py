@@ -57,6 +57,26 @@ policy's `outer` knob:
 
 The engine returns the same logical sorted array as `jnp.sort`, placed
 chunk-contiguous when localised and in the input homing otherwise.
+
+The *local* half of each device's work — the leaf sorts, the local merge
+tree and the merge-split of every network substage — has two
+implementations, selected by ``local_phase``:
+
+  "pallas"     — the VMEM-resident production path: `kernels.local_sort`
+                 fuses the leaf sorts and the whole local merge tree into
+                 ONE pallas_call (chunk read from HBM once, written once),
+                 and `kernels.merge_split` computes only the *kept* half of
+                 every compare-exchange (merge-path partitioning: C outputs
+                 from 2C inputs, never materialising the discarded half).
+  "reference"  — the jnp oracle: per-leaf Pallas sort, then a Python loop
+                 of HBM-materialising vmapped rank merges, and
+                 merge-everything-discard-half at every network substage.
+
+``local_phase=None`` auto-selects: "pallas" for the default
+``local_sort="bitonic"``, "reference" when a callable leaf sort is given
+(a callable can't be fused into the kernel).  The non-localised path's
+merge levels are interleaved with all_gathers, so only its leaf sort is a
+kernel; its merge tree is always the reference form.
 """
 from __future__ import annotations
 
@@ -73,14 +93,39 @@ from jax.sharding import PartitionSpec as P
 from repro.core.homing import Axis, Homing, axis_tuple
 from repro.core.localisation import LocalisationPolicy, chunk_bounds
 from repro.core.sort import (check_pad_outside_trace, merge_sorted,
-                             pad_to_multiple, pad_value)
-from repro.kernels.bitonic_sort import bitonic_sort
+                             pad_to_multiple)
+from repro.kernels.local_sort import local_sort as _local_sort_kernel
+from repro.kernels.merge_split import merge_split as _merge_split_kernel
 
 AXIS = "data"
 
 _merge_rows = jax.vmap(merge_sorted)
 
 LocalSort = Union[str, Callable]
+
+LOCAL_PHASES = ("pallas", "reference")
+
+
+def resolve_local_phase(local_phase: Optional[str],
+                        local_sort: LocalSort) -> str:
+    """The ``local_phase`` contract, shared by the engine and the schedule.
+
+    None auto-selects: "pallas" (the fused-kernel production path) when the
+    leaf sort is the default "bitonic", "reference" when a callable leaf
+    sort was supplied — an arbitrary callable cannot run inside the fused
+    kernel, so it implies the jnp oracle path.
+    """
+    if local_phase is None:
+        return "pallas" if local_sort == "bitonic" else "reference"
+    if local_phase not in LOCAL_PHASES:
+        raise ValueError(f"unknown local_phase {local_phase!r}; "
+                         f"want one of {LOCAL_PHASES} (or None = auto)")
+    if local_phase == "pallas" and callable(local_sort):
+        raise ValueError(
+            "local_phase='pallas' runs the whole local phase inside the "
+            "fused Pallas kernels; a callable local_sort only applies to "
+            "local_phase='reference'")
+    return local_phase
 
 
 def _axes_sizes(mesh: Mesh, axes: Tuple[str, ...]) -> Tuple[int, ...]:
@@ -127,25 +172,27 @@ def _stride_axis(axes: Tuple[str, ...], sizes: Tuple[int, ...],
 def _leaf_sort(rows, local_sort: LocalSort, interpret: bool):
     """Sort each leaf row. rows: (k, leaf) -> (k, leaf) row-sorted.
 
-    local_sort="bitonic" pads each row to the next power of two with BIG
-    sentinels (they sort to the tail, so `[:, :leaf]` strips them) and runs
-    one kernel grid step per leaf, entirely in VMEM. A callable is applied
-    as `local_sort(rows, axis=-1)`.
+    local_sort="bitonic" runs one kernel grid step per leaf, entirely in
+    VMEM; non-power-of-two leaves are sentinel-padded *inside* the kernel's
+    VMEM scratch (`kernels.local_sort`), so no padded copy ever touches HBM
+    — the old path concatenated up to 2x sentinel tail per call.  A callable
+    is applied as `local_sort(rows, axis=-1)`.
     """
     if callable(local_sort):
         return local_sort(rows, axis=-1)
     if local_sort != "bitonic":
         raise ValueError(f"unknown local_sort {local_sort!r}")
-    k, leaf = rows.shape
-    L = 1 << max(0, (leaf - 1).bit_length())
-    if L != leaf:
-        fill = jnp.full((k, L - leaf), pad_value(rows.dtype), rows.dtype)
-        rows = jnp.concatenate([rows, fill], axis=1)
-    return bitonic_sort(rows, interpret=interpret)[:, :leaf]
+    return _local_sort_kernel(rows, interpret=interpret)
 
 
 def _merge_split(run, other, chunk: int, keep_low):
-    """One compare-exchange of the block bitonic network: merge, keep half."""
+    """One compare-exchange of the block bitonic network: merge, keep half.
+
+    The reference form: merges the full 2*chunk run and discards half — 2x
+    the merge compute and HBM traffic of the kept result.  The "pallas"
+    local phase replaces it with `kernels.merge_split`, which computes only
+    the kept half (bit-exact, same rank arithmetic).
+    """
     both = merge_sorted(run, other)                  # (2*chunk,)
     return jnp.where(keep_low, both[:chunk], both[chunk:])
 
@@ -153,7 +200,7 @@ def _merge_split(run, other, chunk: int, keep_low):
 def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
                      hash_homed: bool, local_sort: LocalSort, interpret: bool,
                      axes: Tuple[str, ...], sizes: Tuple[int, ...],
-                     hier: bool):
+                     hier: bool, local_phase: str):
     """Per-device body, localised: one-shot relayout + merge-split tree."""
     name = _axis_name(axes)
     if hash_homed:
@@ -163,11 +210,18 @@ def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
         mine = jax.lax.all_to_all(blocks, name, 0, 0).reshape(-1)
     else:
         mine = xloc                       # already the locally-homed chunk
-    runs = _leaf_sort(mine.reshape(w_per_dev, chunk // w_per_dev),
-                      local_sort, interpret)
-    while runs.shape[0] > 1:              # merge my own leaves, no traffic
-        runs = _merge_rows(runs[0::2], runs[1::2])
-    run = runs[0]
+    if local_phase == "pallas":
+        # Algorithm 2 for the whole local phase: ONE pallas_call copies my
+        # chunk into VMEM, runs the leaf stages AND the full local merge
+        # tree on-chip, and writes the sorted run back once.
+        run = _local_sort_kernel(mine.reshape(1, chunk),
+                                 interpret=interpret)[0]
+    else:
+        runs = _leaf_sort(mine.reshape(w_per_dev, chunk // w_per_dev),
+                          local_sort, interpret)
+        while runs.shape[0] > 1:          # merge my own leaves, no traffic
+            runs = _merge_rows(runs[0::2], runs[1::2])
+        run = runs[0]
     # block-wise bitonic merge-split network over the hypercube: stage i
     # sorts runs of 2^(i+1) blocks; each substage swaps the full chunk with
     # device d XOR 2^j, merges, and keeps the low or high half.  Per-device
@@ -197,10 +251,15 @@ def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
                 # device (q, inner) bits above log_inner are q's bits:
                 asc = ((pods_idx >> (i + 1 - log_inner)) & 1) == 0
                 low = ((pods_idx >> (j - log_inner)) & 1) == 0
-                merged = _merge_rows(pods, partner)  # (n_pods, 2*chunk)
-                keep_low = (low == asc)[:, None]
-                pods = jnp.where(keep_low, merged[:, :chunk],
-                                 merged[:, chunk:])
+                keep_low = low == asc
+                if local_phase == "pallas":
+                    # batched merge-path replay: row q keeps only its half
+                    pods = _merge_split_kernel(pods, partner, keep_low,
+                                               interpret=interpret)
+                else:
+                    merged = _merge_rows(pods, partner)  # (n_pods, 2*chunk)
+                    pods = jnp.where(keep_low[:, None], merged[:, :chunk],
+                                     merged[:, chunk:])
             run = jnp.take(pods, d >> log_inner, axis=0)
             j0 = log_inner - 1                      # intra-pod substages left
         for j in range(j0, -1, -1):
@@ -210,7 +269,12 @@ def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
             other = jax.lax.ppermute(run, ax, perm)  # neighbour-only traffic
             ascending = ((d >> (i + 1)) & 1) == 0
             is_low = ((d >> j) & 1) == 0
-            run = _merge_split(run, other, chunk, is_low == ascending)
+            keep_low = is_low == ascending
+            if local_phase == "pallas":
+                run = _merge_split_kernel(run[None], other[None], keep_low,
+                                          interpret=interpret)[0]
+            else:
+                run = _merge_split(run, other, chunk, keep_low)
     return run
 
 
@@ -261,8 +325,15 @@ def shard_map_sort(x, mesh: Mesh,
                    policy: LocalisationPolicy = LocalisationPolicy(),
                    num_workers: Optional[int] = None,
                    local_sort: LocalSort = "bitonic",
-                   interpret: bool = True, axis: Axis = AXIS):
-    """Sort a 1-D array with the explicit shard_map engine (traceable)."""
+                   interpret: bool = True, axis: Axis = AXIS,
+                   local_phase: Optional[str] = None):
+    """Sort a 1-D array with the explicit shard_map engine (traceable).
+
+    ``local_phase`` selects the per-device compute implementation (see the
+    module docstring): "pallas" = fused VMEM-resident kernels, "reference" =
+    the jnp oracle path, None = auto by ``local_sort``.
+    """
+    local_phase = resolve_local_phase(local_phase, local_sort)
     axes = axis_tuple(axis)
     sizes = _axes_sizes(mesh, axes)
     n = x.shape[0]
@@ -297,7 +368,8 @@ def shard_map_sort(x, mesh: Mesh,
         body = partial(_localised_shard, m=m, chunk=chunk,
                        w_per_dev=w_per_dev, hash_homed=hash_homed,
                        local_sort=local_sort, interpret=interpret,
-                       axes=axes, sizes=sizes, hier=hier)
+                       axes=axes, sizes=sizes, hier=hier,
+                       local_phase=local_phase)
         out_spec = P(spec_axis)                    # chunk-contiguous output
     else:
         body = partial(_unlocalised_shard, m=m, chunk=chunk, w=w,
@@ -315,17 +387,39 @@ def shard_map_sort(x, mesh: Mesh,
 def exchange_schedule(n: int, sizes: Sequence[int],
                       policy: LocalisationPolicy,
                       num_workers: Optional[int] = None,
-                      itemsize: int = 4) -> List[Dict]:
-    """The engine's exchange plan as per-level byte counts (paper Fig 9).
+                      itemsize: int = 4,
+                      local_phase: Optional[str] = None) -> List[Dict]:
+    """The engine's full execution plan as per-level byte counts (Fig 9).
 
     `sizes` are the sort-axis sizes in axis order, inner (ICI) last — e.g.
     (2, 4) for a ("pod", "data") mesh slice.  Returns one record per
-    collective in execution order: ``level`` (0 = relayout, k = merge level
-    k), ``op``, and total ``inter_pod_bytes`` / ``intra_pod_bytes`` moved
-    across all devices — bytes are hardware-independent facts of the
-    schedule, the measurable form of the paper's locality argument.  Must
-    mirror the shard_map bodies above; the structure tests pin them to the
-    lowered HLO's collective counts.
+    collective *and* per local compute step, in execution order.  Every
+    record carries ``level`` (0 = relayout/leaves, k = merge level k),
+    ``op``, ``inter_pod_bytes`` / ``intra_pod_bytes`` (collective traffic,
+    0 for local ops), ``local_hbm_bytes`` (HBM read+write traffic of the
+    local compute, 0 for collectives) and ``local_merge_elems`` (merge
+    output elements materialised — the "compute only what you keep" count).
+    All totals are summed across devices; bytes are hardware-independent
+    facts of the schedule, the measurable form of both halves of the
+    paper's argument (exchange locality AND cache-resident local phase).
+
+    ``local_phase`` prices the local records ("pallas" = fused one-pass
+    kernels + kept-half merge-splits, "reference" = HBM-materialising tree
+    + merge-everything-discard-half; None = "pallas", the engine default).
+    The collective records are identical under both phases.  Local cost
+    model, per device and per step (B = chunk bytes, C = chunk elems,
+    T = log2(w_per_dev) local tree levels):
+
+      local_sort   pallas:    2B traffic (one VMEM round trip), C elems
+                   reference: 2B*(1+T) traffic (leaves + every tree level
+                              re-materialised), C*(1+T) elems
+      merge_split  pallas:    3B traffic (read both runs, write kept half),
+                              C elems
+                   reference: 7B traffic (read 2B, write the 2C merge,
+                              re-read it, write the kept half), 2C elems
+
+    Must mirror the shard_map bodies above; the structure tests pin the
+    collective records to the lowered HLO's collective counts.
     """
     sizes = tuple(sizes)
     m = math.prod(sizes)
@@ -334,50 +428,76 @@ def exchange_schedule(n: int, sizes: Sequence[int],
     w = num_workers or m
     hash_homed = policy.homing == Homing.HASH_INTERLEAVED
     hier = policy.outer is not None
+    local_phase = resolve_local_phase(local_phase, "bitonic")
     if hier and len(sizes) < 2:
         raise ValueError(
             f"hierarchical policy {policy.name!r} needs (pod, ..., inner) "
             f"axis sizes, got {sizes!r} — same contract as shard_map_sort")
     granule = engine_granule(m, num_workers, hash_homed)
     n_p = n + (-n) % granule
-    B = (n_p // m) * itemsize                       # one chunk, in bytes
+    chunk = n_p // m                                # one chunk, in elements
+    B = chunk * itemsize                            # one chunk, in bytes
     log_inner = m_inner.bit_length() - 1
+    pallas = local_phase == "pallas"
     out: List[Dict] = []
 
-    def rec(level, op, inter, intra):
+    def rec(level, op, inter, intra, hbm=0, elems=0):
         out.append({"level": level, "op": op,
-                    "inter_pod_bytes": inter, "intra_pod_bytes": intra})
+                    "inter_pod_bytes": inter, "intra_pod_bytes": intra,
+                    "local_hbm_bytes": hbm, "local_merge_elems": elems})
+
+    def merge_split_rec(level, rows):
+        """One network substage: every device merge-splits `rows` runs."""
+        rec(level, "merge_split", 0, 0,
+            hbm=(3 if pallas else 7) * m * rows * B,
+            elems=(1 if pallas else 2) * m * rows * chunk)
 
     if not policy.localised:
         # leaf gather + one full gather per merge level: every device
-        # re-reads everything it doesn't hold, at every level.
+        # re-reads everything it doesn't hold, at every level.  The local
+        # work (each device sorts/merges the whole gathered array) is
+        # always the reference tree — its levels are interleaved with the
+        # gathers, so there is nothing for the fused kernel to keep
+        # resident; ``local_phase`` changes nothing here.
         for lvl in range(w.bit_length()):
             rec(lvl, "all_gather",
                 m * (m - m_inner) * B, m * (m_inner - 1) * B)
+            rec(lvl, "local_sort" if lvl == 0 else "merge", 0, 0,
+                hbm=2 * m * n_p * itemsize, elems=m * n_p)
         return out
 
     if hash_homed:
         # one-shot relayout: each device sends m-1 of its m chunk-blocks
         rec(0, "all_to_all",
             m * (m - m_inner) * (B // m), m * (m_inner - 1) * (B // m))
+    tree = max(0, (w // m).bit_length() - 1)        # local merge-tree levels
+    rec(0, "local_sort", 0, 0,
+        hbm=2 * n_p * itemsize * (1 if pallas else 1 + tree),
+        elems=n_p * (1 if pallas else 1 + tree))
     for i in range(m.bit_length() - 1):
         j0 = i
         if hier and i >= log_inner:
             rec(i + 1, "all_gather", m * (n_pods - 1) * B, 0)
+            for _ in range(i, log_inner - 1, -1):
+                # cross-pod substage replayed per pod on the gathered rows
+                merge_split_rec(i + 1, n_pods)
             j0 = log_inner - 1
         for j in range(j0, -1, -1):
             cross = (1 << j) >= m_inner
             rec(i + 1, "ppermute", m * B if cross else 0,
                 0 if cross else m * B)
+            merge_split_rec(i + 1, 1)
     return out
 
 
 def make_engine_fn(mesh: Optional[Mesh], policy: LocalisationPolicy,
                    num_workers: Optional[int] = None,
                    local_sort: LocalSort = "bitonic",
-                   interpret: bool = True, axis: Axis = AXIS):
+                   interpret: bool = True, axis: Axis = AXIS,
+                   local_phase: Optional[str] = None):
     """Jitted engine sort for one Table-1 case; input donated (step 5)."""
     from repro.core.sort import sort_entry          # local: avoid cycle
+    resolve_local_phase(local_phase, local_sort)    # fail fast, not at trace
     if mesh is None:
         a = axis if isinstance(axis, str) else axis[-1]
         mesh = jax.make_mesh((len(jax.devices()),), (a,))
@@ -388,5 +508,5 @@ def make_engine_fn(mesh: Optional[Mesh], policy: LocalisationPolicy,
     granule = engine_granule(m, num_workers, hash_homed)
     fn = partial(shard_map_sort, mesh=mesh, policy=policy,
                  num_workers=num_workers, local_sort=local_sort,
-                 interpret=interpret, axis=axis)
+                 interpret=interpret, axis=axis, local_phase=local_phase)
     return sort_entry(jax.jit(fn, donate_argnums=(0,)), granule)

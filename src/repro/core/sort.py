@@ -237,7 +237,8 @@ def distributed_merge_sort(x, mesh: Optional[Mesh] = None,
 
 def make_sort_fn(mesh, policy: LocalisationPolicy, num_workers=None,
                  local_sort=None, backend: str = "constraint",
-                 axis: Axis = "data", interpret: bool = True):
+                 axis: Axis = "data", interpret: bool = True,
+                 local_phase: str = None):
     """Jitted sort for one Table-1 case; input buffer donated (step 5).
 
     backend="constraint": the original `with_sharding_constraint`-hint tree —
@@ -247,7 +248,11 @@ def make_sort_fn(mesh, policy: LocalisationPolicy, num_workers=None,
     exchange are spelled out literally (paper Algorithms 1-3).
 
     `local_sort=None` picks the backend default (jnp.sort for the hint
-    backend, the Pallas bitonic kernel for the engine).
+    backend, the Pallas bitonic kernel for the engine).  `local_phase`
+    selects the engine's per-device compute: "pallas" (fused VMEM-resident
+    local-sort + kept-half merge-split kernels), "reference" (the jnp
+    oracle), or None = auto by `local_sort` — engine backend only; the
+    constraint tree has no kernel path.
 
     Callers normally reach this through `Locale.workload("sort", ...)`
     (`repro.core.api`), which supplies (mesh, axis, policy) from one object.
@@ -258,7 +263,12 @@ def make_sort_fn(mesh, policy: LocalisationPolicy, num_workers=None,
         from repro.core.engine import make_engine_fn   # local: avoid cycle
         return make_engine_fn(mesh, policy, num_workers=num_workers,
                               local_sort=local_sort or "bitonic",
-                              axis=axis, interpret=interpret)
+                              axis=axis, interpret=interpret,
+                              local_phase=local_phase)
+    if local_phase not in (None, "reference"):
+        raise ValueError(
+            f"local_phase={local_phase!r} needs backend='shard_map' — the "
+            f"constraint tree's local phase is the jnp reference by nature")
     fn = partial(distributed_merge_sort, mesh=mesh, policy=policy,
                  num_workers=num_workers, local_sort=local_sort or jnp.sort,
                  axis=axis)

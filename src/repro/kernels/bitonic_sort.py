@@ -5,28 +5,38 @@ HBM->VMEM once (the paper's `input_cpy` memcpy, Algorithm 2), all
 O(L log^2 L) compare-exchange stages run on-chip, and the sorted run is
 written back once. Partner exchange is expressed with reshape+flip (no
 gathers), which maps onto TPU vector shuffles.
+
+`bitonic_stages` is the network itself, shared with the fused
+`local_sort` kernel (leaf sorts + the whole local merge tree in one
+pallas_call — see `repro.kernels.local_sort`).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _bitonic_stages(v):
-    """Sort each row of v: (1, L) ascending. L must be a power of two."""
-    L = v.shape[-1]
+def bitonic_stages(v):
+    """Sort each row of v: (R, L) ascending. L must be a power of two.
+
+    The classic network: stage k sorts every aligned k-block, alternating
+    direction by the block's position bit so stage 2k sees bitonic input.
+    Rows are contiguous in the row-major reshape, so the same
+    reshape+flip partner exchange sorts all R rows at once.
+    """
+    R, L = v.shape
     assert L & (L - 1) == 0, f"bitonic length {L} not a power of 2"
-    idx = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
+    if L == 1:
+        return v
+    idx = jax.lax.broadcasted_iota(jnp.int32, (R, L), 1)
     k = 2
     while k <= L:
         j = k // 2
         while j >= 1:
             r = v.reshape(-1, 2, j)
-            partner = jnp.flip(r, axis=1).reshape(1, L)
-            asc = (idx & k) == 0 if k < L else jnp.ones((1, L), bool)
+            partner = jnp.flip(r, axis=1).reshape(R, L)
+            asc = (idx & k) == 0 if k < L else jnp.ones((R, L), bool)
             lower = (idx & j) == 0
             mn = jnp.minimum(v, partner)
             mx = jnp.maximum(v, partner)
@@ -37,7 +47,7 @@ def _bitonic_stages(v):
 
 
 def _kernel(x_ref, o_ref):
-    o_ref[...] = _bitonic_stages(x_ref[...])
+    o_ref[...] = bitonic_stages(x_ref[...])
 
 
 def bitonic_sort(x, *, interpret: bool = True):

@@ -12,7 +12,9 @@ import jax.numpy as jnp
 
 from repro.kernels import bitonic_sort as _bs
 from repro.kernels import flash_attention as _fa
+from repro.kernels import local_sort as _ls
 from repro.kernels import localised_copy as _lc
+from repro.kernels import merge_split as _ms
 from repro.core.sort import merge_sorted
 
 
@@ -37,6 +39,18 @@ def chunked_sort(x, *, interpret=True):
     while runs.shape[0] > 1:
         runs = jax.vmap(merge_sorted)(runs[0::2], runs[1::2])
     return runs[0]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def local_sort(x, *, interpret=True):
+    """Fused local phase: leaf sorts + the whole merge tree, one VMEM pass."""
+    return _ls.local_sort(x, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def merge_split(a, b, keep_low, *, interpret=True):
+    """Merge-path merge-split: only the kept half is computed/written."""
+    return _ms.merge_split(a, b, keep_low, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("reps", "interpret"))

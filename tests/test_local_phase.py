@@ -1,0 +1,292 @@
+"""VMEM-resident local phase: fused `local_sort` + merge-path `merge_split`.
+
+Property grid pins the two kernels bit-exact against their jnp oracles
+(`jnp.sort` rows; `merge_sorted`-then-slice) across duplicates, BIG/inf
+sentinel values appearing as *data*, already/reverse-sorted inputs, both
+core dtypes and non-power-of-two lengths/leaf counts (the in-VMEM sentinel
+padding path).  The engine is then pinned bit-exact under both
+``local_phase`` implementations, fast on the 1-device mesh and (slow) on
+8-device flat + emulated-pod meshes.  Compiled (interpret=False) variants
+are skip-guarded: they only run on a real accelerator.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LOCAL_PHASES, Homing, Locale, LocalisationPolicy,
+                        exchange_schedule)
+from repro.core.sort import merge_sorted
+from repro.kernels import ops
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:                 # for the in-process benchmark tests
+    sys.path.insert(0, ROOT)
+ON_CPU = jax.default_backend() == "cpu"
+BIGI = int(jnp.iinfo(jnp.int32).max)
+
+
+def _rows(name: str, C: int, rows: int = 3):
+    """One property-grid corner: (rows, C) arrays worth sorting."""
+    key = jax.random.key(C * 31 + rows)
+    if name == "dups_int":               # heavy duplicates, int32
+        return jax.random.randint(key, (rows, C), -4, 4, dtype=jnp.int32)
+    if name == "rand_int":
+        return jax.random.randint(key, (rows, C), -10**6, 10**6,
+                                  dtype=jnp.int32)
+    if name == "sentinel_int":           # BIG sentinel present as real data
+        x = jax.random.randint(key, (rows, C), -9, 9, dtype=jnp.int32)
+        return x.at[:, ::3].set(BIGI)
+    if name == "rand_float":
+        return jax.random.normal(key, (rows, C), jnp.float32)
+    if name == "sentinel_float":         # +/-inf present as real data
+        x = jax.random.normal(key, (rows, C), jnp.float32)
+        return x.at[:, ::5].set(jnp.inf).at[:, 1::7].set(-jnp.inf)
+    if name == "sorted":
+        return jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (rows, C))
+    if name == "reversed":
+        return jnp.broadcast_to(jnp.arange(C, 0, -1, dtype=jnp.int32),
+                                (rows, C))
+    raise AssertionError(name)
+
+
+GRID_NAMES = ("dups_int", "rand_int", "sentinel_int", "rand_float",
+              "sentinel_float", "sorted", "reversed")
+# C=96 -> 3 leaves of 32 (non-power-of-two leaf count), C=1/5/257 ->
+# in-VMEM sentinel padding, C=256 -> the clean power-of-two lane
+GRID_C = (1, 5, 96, 256, 257)
+
+
+# ---------------------------------------------------------------------------
+# local_sort: fused leaf sorts + merge tree, one VMEM pass
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", GRID_NAMES)
+@pytest.mark.parametrize("C", GRID_C)
+def test_local_sort_matches_jnp_sort(name, C):
+    x = _rows(name, C)
+    np.testing.assert_array_equal(np.asarray(ops.local_sort(x)),
+                                  np.sort(np.asarray(x), axis=-1))
+
+
+def test_local_sort_keeps_real_sentinels_with_padding():
+    """A BIG-valued *data* element must survive the in-VMEM pad+strip."""
+    x = jnp.asarray([[5, BIGI, -3, 1, 2]], jnp.int32)       # C=5 -> pads to 8
+    np.testing.assert_array_equal(np.asarray(ops.local_sort(x))[0],
+                                  np.asarray([-3, 1, 2, 5, BIGI]))
+    xf = jnp.asarray([[jnp.inf, 0.5, -jnp.inf]], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ops.local_sort(xf))[0],
+                                  np.asarray([-np.inf, 0.5, np.inf],
+                                             np.float32))
+
+
+# ---------------------------------------------------------------------------
+# merge_split: only the kept half, bit-exact vs merge_sorted + slice
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", GRID_NAMES)
+@pytest.mark.parametrize("C", GRID_C)
+def test_merge_split_matches_merge_sorted_slice(name, C):
+    rows = 4
+    a = jnp.sort(_rows(name, C, rows), axis=-1)
+    b = jnp.sort(_rows(name, C, rows)[::-1], axis=-1)
+    keep = (jnp.arange(rows) % 2) == 0               # mixed per-row flags
+    out = np.asarray(ops.merge_split(a, b, keep))
+    for r in range(rows):
+        full = np.asarray(merge_sorted(a[r], b[r]))
+        expect = full[:C] if bool(keep[r]) else full[C:]
+        np.testing.assert_array_equal(out[r], expect,
+                                      err_msg=f"{name} C={C} row={r}")
+
+
+def test_merge_split_scalar_flag_and_tie_stability():
+    """Scalar keep flag broadcasts; duplicate ties split exactly as the
+    stable rank merge does (a-elements before equal b-elements)."""
+    a = jnp.asarray([[1, 2, 2, 7]], jnp.int32)
+    b = jnp.asarray([[2, 2, 3, 7]], jnp.int32)
+    full = np.asarray(merge_sorted(a[0], b[0]))
+    for keep in (True, False):
+        got = np.asarray(ops.merge_split(a, b, jnp.asarray(keep)))[0]
+        np.testing.assert_array_equal(got, full[:4] if keep else full[4:])
+
+
+@pytest.mark.skipif(ON_CPU, reason="interpret=False needs a real accelerator "
+                                   "(TPU); CPU only runs interpret mode")
+def test_kernels_compiled_mode_matches_interpret():
+    x = _rows("rand_int", 256)
+    np.testing.assert_array_equal(
+        np.asarray(ops.local_sort(x, interpret=False)),
+        np.asarray(ops.local_sort(x, interpret=True)))
+    a = jnp.sort(_rows("dups_int", 128), axis=-1)
+    b = jnp.sort(_rows("rand_int", 128), axis=-1)
+    keep = jnp.asarray([True, False, True])
+    np.testing.assert_array_equal(
+        np.asarray(ops.merge_split(a, b, keep, interpret=False)),
+        np.asarray(ops.merge_split(a, b, keep, interpret=True)))
+
+
+# ---------------------------------------------------------------------------
+# the engine under both local_phase implementations
+# ---------------------------------------------------------------------------
+ENGINE_POLICIES = [LocalisationPolicy(True, True, Homing.LOCAL_CHUNKED),
+                   LocalisationPolicy(True, True, Homing.HASH_INTERLEAVED),
+                   LocalisationPolicy(False, True, Homing.HASH_INTERLEAVED)]
+
+
+@pytest.mark.parametrize("local_phase", LOCAL_PHASES)
+@pytest.mark.parametrize("policy", ENGINE_POLICIES,
+                         ids=lambda p: p.name)
+def test_engine_single_device_bit_exact_per_phase(policy, local_phase):
+    """1-device mesh, n=1000 => padded chunk, non-power-of-two leaves."""
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    fn = Locale(mesh=mesh, policy=policy).workload(
+        "engine", num_workers=8, local_phase=local_phase)
+    for n, dt in ((1000, jnp.int32), (513, jnp.float32)):
+        x = (jax.random.randint(jax.random.key(n), (n,), -10**5, 10**5,
+                                dtype=dt) if dt == jnp.int32
+             else jax.random.normal(jax.random.key(n), (n,), dt))
+        expect = np.sort(np.asarray(x))
+        np.testing.assert_array_equal(np.asarray(fn(x)), expect,
+                                      err_msg=f"{policy.name} {local_phase}")
+
+
+def test_local_phase_validation():
+    with pytest.raises(ValueError, match="local_phase"):
+        Locale().workload("engine", local_phase="nope")
+    # a callable leaf sort cannot run inside the fused kernel
+    with pytest.raises(ValueError, match="callable"):
+        Locale().workload("engine", local_sort=jnp.sort,
+                          local_phase="pallas")
+    # the constraint tree has no kernel local phase
+    with pytest.raises(ValueError, match="shard_map"):
+        Locale().workload("sort", backend="constraint", local_phase="pallas")
+    # "reference" is the constraint tree's nature: accepted as a no-op
+    fn = Locale().workload("sort", backend="constraint",
+                           local_phase="reference", num_workers=4)
+    x = jnp.asarray([3, 1, 2], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(fn(x)), [1, 2, 3])
+
+
+@pytest.mark.slow
+def test_engine_8dev_and_pods_bit_exact_both_phases():
+    """Acceptance: flat 8-device and (2,4,1) emulated-pod meshes, all
+    localised policies (incl. hierarchical — the batched merge_split
+    replay), pallas vs reference, bit-identical to jnp.sort."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import Homing, Locale, LocalisationPolicy
+from repro.launch.mesh import make_host_mesh
+flat = Locale.auto()
+pods = Locale(mesh=make_host_mesh(n_pods=2, n_data=4, n_model=1),
+              axis=("pod", "data"))
+grids = [(flat, [LocalisationPolicy(True, True, Homing.LOCAL_CHUNKED),
+                 LocalisationPolicy(True, True, Homing.HASH_INTERLEAVED),
+                 LocalisationPolicy(False, True, Homing.HASH_INTERLEAVED)]),
+         (pods, [LocalisationPolicy.hierarchical(),
+                 LocalisationPolicy.hierarchical(inner="hash"),
+                 LocalisationPolicy(True, True, Homing.LOCAL_CHUNKED)])]
+for locale, pols in grids:
+    for pol in pols:
+        for phase in ("pallas", "reference"):
+            for n, dt in [(1 << 13, jnp.int32), (5000, jnp.float32)]:
+                if dt == jnp.int32:
+                    x = jax.random.randint(jax.random.key(1), (n,), -10**6,
+                                           10**6, dtype=dt)
+                else:
+                    x = jax.random.normal(jax.random.key(1), (n,), dt)
+                expect = np.asarray(jnp.sort(x))
+                fn = locale.with_policy(pol).workload(
+                    "sort", backend="shard_map", local_phase=phase)
+                np.testing.assert_array_equal(np.asarray(fn(x)), expect,
+                    err_msg=f"{pol.name} {phase} {n}")
+print("PHASES_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=ROOT, timeout=900)
+    assert "PHASES_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# exchange_schedule: the local half of the byte model
+# ---------------------------------------------------------------------------
+def test_schedule_prices_pallas_local_phase_strictly_cheaper():
+    n = 1 << 13
+    for sizes in [(8,), (2, 4), (4, 2)]:
+        pols = [LocalisationPolicy(),
+                LocalisationPolicy(True, True, Homing.HASH_INTERLEAVED)]
+        if len(sizes) > 1:
+            pols.append(LocalisationPolicy.hierarchical())
+        for pol in pols:
+            pal = exchange_schedule(n, sizes, pol, local_phase="pallas")
+            ref = exchange_schedule(n, sizes, pol, local_phase="reference")
+            tot = lambda s, k: sum(r[k] for r in s)
+            # the collective half of the schedule is phase-independent
+            coll = lambda s: [(r["level"], r["op"], r["inter_pod_bytes"],
+                               r["intra_pod_bytes"]) for r in s
+                              if r["op"] in ("ppermute", "all_gather",
+                                             "all_to_all")]
+            assert coll(pal) == coll(ref)
+            # the local half is strictly cheaper fused: one VMEM round trip
+            # for the whole tree, and only the kept half of every split
+            assert tot(pal, "local_hbm_bytes") < tot(ref, "local_hbm_bytes")
+            assert tot(pal, "local_merge_elems") < \
+                tot(ref, "local_merge_elems"), (sizes, pol.name)
+            # every merge_split computes exactly half the reference elems
+            for rp, rr in zip(pal, ref):
+                assert rp["op"] == rr["op"] and rp["level"] == rr["level"]
+                if rp["op"] == "merge_split":
+                    assert 2 * rp["local_merge_elems"] == \
+                        rr["local_merge_elems"]
+                # local ops move no collective bytes, and vice versa
+                assert (rp["local_hbm_bytes"] == 0) or \
+                    (rp["inter_pod_bytes"] == 0 and
+                     rp["intra_pod_bytes"] == 0)
+
+
+def test_schedule_nonlocalised_local_cost_phase_independent():
+    """No fused path without ownership: gathers interleave every level."""
+    pol = LocalisationPolicy(False, True, Homing.LOCAL_CHUNKED)
+    pal = exchange_schedule(1 << 12, (8,), pol, local_phase="pallas")
+    ref = exchange_schedule(1 << 12, (8,), pol, local_phase="reference")
+    assert pal == ref
+    ops_seen = [r["op"] for r in pal]
+    assert ops_seen[:2] == ["all_gather", "local_sort"]
+    assert ops_seen.count("merge") == 3              # log2(8) tree levels
+
+
+# ---------------------------------------------------------------------------
+# satellites: benchmark capture + regression gate
+# ---------------------------------------------------------------------------
+def test_bench_kernels_capture_reaches_json_records():
+    """run.py's LOCAL capture: kernel rows must reach parse_records (they
+    used to be printed uncaptured, so BENCH_kernels.json could never fill)."""
+    from benchmarks.run import JSON_FILES, parse_records, run_local
+    out = run_local("bench_kernels",
+                    ["--only", "local,merge", "--chunks", "1", "--logcs", "6"])
+    recs = parse_records(out)
+    names = {r["name"] for r in recs}
+    assert any(n.startswith("kernel_local_fused_") for n in names), out
+    assert any(n.startswith("kernel_merge_split_") for n in names), out
+    prefixes = JSON_FILES["BENCH_kernels.json"]
+    assert all(any(r["name"].startswith(p) for p in prefixes) for r in recs)
+
+
+def test_compare_flags_synthetic_regression(tmp_path):
+    import json
+    base = [{"name": "sort_x", "us": 100.0}, {"name": "sort_y", "us": 80.0},
+            {"name": "structure_only", "us": None}]
+    new = [{"name": "sort_x", "us": 150.0}, {"name": "sort_y", "us": 70.0},
+           {"name": "structure_only", "us": None}]
+    bp, np_ = tmp_path / "base.json", tmp_path / "new.json"
+    bp.write_text(json.dumps(base))
+    np_.write_text(json.dumps(new))
+    from benchmarks.compare import main as compare_main
+    # 50% regression on sort_x: above a 10% gate -> fail, above 60% -> pass
+    assert compare_main([str(bp), str(np_), "--fail-above", "10"]) == 1
+    assert compare_main([str(bp), str(np_), "--fail-above", "60"]) == 0
+    assert compare_main([str(bp), str(np_)]) == 0    # no gate, report only
