@@ -11,7 +11,15 @@ than PCT percent — wire it between a committed baseline and a fresh
 ``benchmarks/run.py`` run to gate a PR.
 
 Structure-only records (``us == null``: HLO byte counts, exchange-schedule
-rows) carry no wall-clock and are skipped.
+rows, serving wait/relayout rows) carry no wall-clock and are skipped.
+
+Serving throughput is gated the same way: ``BENCH_serve.json``'s timed
+``serve_<policy>_<mesh>`` rows store *us per generated token*, so "NEW is
+slower" means fewer tokens per second and ``--fail-above`` catches a
+serving regression exactly like a sort one:
+
+    python -m benchmarks.compare BENCH_serve.json /tmp/new/BENCH_serve.json \
+        --fail-above 25
 """
 from __future__ import annotations
 

@@ -36,6 +36,10 @@ MULTIDEV = [
      "hierarchical multi-pod engine: inter/intra-pod exchange bytes (Fig 9)"),
     ("bench_sort_sizes", "bench_sort_sizes", "paper Fig 3: input-size sweep"),
     ("bench_striping", "bench_striping", "paper Fig 4: striping analogue"),
+    ("bench_serve", "bench_serve",
+     "home-aware serving scheduler: fifo vs homed, flat mesh"),
+    ("bench_serve_pods", "bench_serve",
+     "home-aware serving scheduler on the (2,2,2) emulated-pod mesh"),
 ]
 LOCAL = [
     ("bench_kernels", "Pallas kernel localisation (Fig 1, TPU-native)"),
@@ -45,6 +49,7 @@ LOCAL = [
 # per-run argv for the full harness (8 devices)
 FULL_ARGS = {
     "bench_sort_pods": ["--pods", "2x4", "--logn", "18"],
+    "bench_serve_pods": ["--pods", "2x2x2"],
 }
 
 # per-run argv for --smoke: toy sizes, a case subset, short sweeps;
@@ -54,7 +59,13 @@ SMOKE_ARGS = {
     "bench_sort_cases": ["--logn", "12", "--cases", "3,8"],
     "bench_sort_pods": ["--pods", "2x1", "--logn", "10"],
     "bench_sort_sizes": ["--logns", "12"],
-    "bench_striping": ["--logn", "14"],
+    "bench_striping": ["--logn", "14", "--logb", "6"],
+    "bench_serve": ["--slots", "4", "--requests", "10", "--max-len", "32",
+                    "--short-new", "2", "--long-new", "6", "--sessions", "3",
+                    "--reps", "1"],
+    "bench_serve_pods": ["--pods", "2x1", "--slots", "4", "--requests", "16",
+                         "--max-len", "32", "--short-new", "2",
+                         "--long-new", "6", "--sessions", "3", "--reps", "1"],
     "bench_kernels": ["--only", "local,merge", "--chunks", "2",
                       "--logcs", "8"],
 }
@@ -65,6 +76,7 @@ JSON_FILES = {
     "BENCH_microbench.json": ("microbench_",),
     "BENCH_engine.json": ("engine_",),
     "BENCH_kernels.json": ("kernel_",),
+    "BENCH_serve.json": ("serve_",),
 }
 
 

@@ -157,6 +157,22 @@ class Locale:
         """Chunk-contiguous spec: leading dim owned per-device, rest whole."""
         return P(self.axis, *([None] * (ndim - 1)))
 
+    def owners(self, size: int) -> Tuple[int, ...]:
+        """Home-device index of each of `size` chunk-contiguously homed items.
+
+        The ownership map of `chunk_bounds` (paper step 1/2 — the same math
+        the engine uses for sort chunks), applied to any per-item axis:
+        ``owners(B)[s]`` is the linearised (pod-major on tuple axes) device
+        index that item/slot ``s`` lives on.  The serving scheduler routes,
+        batches and evicts decode slots with exactly this map.  Without a
+        mesh every item is homed on the single device 0.
+        """
+        from repro.core.localisation import chunk_bounds
+        out: list = []
+        for dev, (lo, hi) in enumerate(chunk_bounds(size, self.axis_size)):
+            out.extend([dev] * (hi - lo))
+        return tuple(out)
+
     def sharding(self, ndim: int = 1) -> Optional[NamedSharding]:
         """The chunk-contiguous NamedSharding (None without a mesh)."""
         if self.mesh is None:

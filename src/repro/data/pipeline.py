@@ -7,6 +7,15 @@ is generated directly on (for) that device, never resharded after the fact
 sort and the serving layer use; the pipeline constructs no shardings of
 its own.
 
+Host-side generation is *striped* to match: every leaf of the batch
+(tokens, targets, frame embeddings, image embeddings) is produced by a
+per-row content function, and under ``striped=True`` (the default) each
+device's callback materialises only the rows that device owns — the full
+``(B, S[, D])`` array is never built on the host.  ``striped=False`` keeps
+the old build-everything-then-place path as the bit-exact oracle;
+``benchmarks/bench_striping.py --pipeline`` times the two against each
+other (the ROADMAP's striping acceptance benchmark).
+
 Determinism: batch content is a pure function of (seed, step, element row),
 so a restart replays exactly the same batches — the property checkpoint
 resume and straggler/failure recovery rely on.
@@ -18,6 +27,7 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
@@ -38,6 +48,21 @@ def _row_tokens(seed: int, step: int, row: int, seq_len: int,
     return toks.astype(np.int32)
 
 
+def _embed_rows(toks: np.ndarray, d_model: int) -> np.ndarray:
+    """Stub frontend: frame embeddings derived deterministically per row."""
+    return (np.sin(toks[..., None] * (1.0 + np.arange(d_model)))
+            / 8.0).astype(np.float32)
+
+
+def _row_image_embeds(seed: int, step: int, row: int, n_tokens: int,
+                      d_model: int) -> np.ndarray:
+    """Per-row image stub — a function of (seed, step, row) like every other
+    leaf, so image batches stripe over devices exactly like token batches."""
+    rng = np.random.RandomState((seed * 31 + step * 7919 + row * 104_729)
+                                % (2 ** 31 - 1))
+    return (rng.randn(n_tokens, d_model) / 8.0).astype(np.float32)
+
+
 @dataclass
 class SyntheticLM:
     cfg: ArchConfig
@@ -45,6 +70,7 @@ class SyntheticLM:
     seq_len: int
     seed: int = 0
     mesh: Optional[Mesh] = None
+    striped: bool = True    # per-device generation; False = host-build oracle
 
     @property
     def locale(self) -> Locale:
@@ -63,48 +89,80 @@ class SyntheticLM:
     def batch(self, step: int) -> dict:
         B, S, V = self.global_batch, self.seq_len, self.cfg.vocab_size
         locale = self.locale
+        if not self.striped:
+            return self._host_batch(step, locale)
 
         built = {}
 
         def build(rows):
-            # both callbacks see the same row range per device — build once
+            # every callback sees the same row range per device — build once
             key = (rows.start, rows.stop)
             if key not in built:
                 built[key] = np.stack([_row_tokens(self.seed, step, r, S, V)
                                        for r in rows])
             return built[key]
 
-        # localised placement: each device materialises only the rows it owns
+        def rows_of(index):
+            return range(*index[0].indices(B))
+
+        # localised generation: each device materialises only the rows it
+        # owns — for every leaf, including the (B, S, D) embedding stripes
         def cb(index):
-            rows = range(*index[0].indices(B))
-            return build(rows)[:, :-1]
+            return build(rows_of(index))[:, :-1]
 
         def cb_t(index):
-            rows = range(*index[0].indices(B))
-            return build(rows)[:, 1:]
+            return build(rows_of(index))[:, 1:]
 
-        toks = locale.make((B, S), cb)
-        tgts = locale.make((B, S), cb_t)
-        batch = {"targets": jnp.asarray(tgts)}
+        batch = {"targets": locale.make((B, S), cb_t)}
         if self.cfg.embed_input:
-            batch["tokens"] = jnp.asarray(toks)
+            batch["tokens"] = locale.make((B, S), cb)
         else:
-            # stub frontend: frame embeddings derived deterministically
-            t = np.asarray(toks)
-            emb = (np.sin(t[..., None] * (1.0 + np.arange(self.cfg.d_model)))
-                   / 8.0).astype(np.float32)
-            batch["embeds"] = jnp.asarray(emb)
+            def cb_e(index):
+                return _embed_rows(build(rows_of(index))[:, :-1],
+                                   self.cfg.d_model)
+
+            batch["embeds"] = locale.make((B, S, self.cfg.d_model), cb_e)
         if self.cfg.family == "vlm":
-            rng = np.random.RandomState(self.seed * 31 + step)
-            batch["image_embeds"] = jnp.asarray(
-                rng.randn(B, self.cfg.num_image_tokens,
-                          self.cfg.d_model).astype(np.float32) / 8.0)
+            T, D = self.cfg.num_image_tokens, self.cfg.d_model
+
+            def cb_i(index):
+                return np.stack([_row_image_embeds(self.seed, step, r, T, D)
+                                 for r in rows_of(index)])
+
+            batch["image_embeds"] = locale.make((B, T, D), cb_i)
+        return batch
+
+    def _host_batch(self, step: int, locale: Locale) -> dict:
+        """The pre-striping oracle: build every full array on the host, then
+        place it.  Same per-row content functions, so `striped=True` must
+        reproduce it bit-exactly; kept for the acceptance benchmark."""
+        B, S, V = self.global_batch, self.seq_len, self.cfg.vocab_size
+
+        def place(a: np.ndarray):
+            if locale.mesh is None:
+                return jnp.asarray(a)
+            return jax.device_put(a, locale.sharding(a.ndim))
+
+        full = np.stack([_row_tokens(self.seed, step, r, S, V)
+                         for r in range(B)])
+        batch = {"targets": place(full[:, 1:])}
+        if self.cfg.embed_input:
+            batch["tokens"] = place(full[:, :-1])
+        else:
+            batch["embeds"] = place(_embed_rows(full[:, :-1],
+                                                self.cfg.d_model))
+        if self.cfg.family == "vlm":
+            T, D = self.cfg.num_image_tokens, self.cfg.d_model
+            batch["image_embeds"] = place(
+                np.stack([_row_image_embeds(self.seed, step, r, T, D)
+                          for r in range(B)]))
         return batch
 
 
 def make_batch_iterator(cfg, global_batch, seq_len, seed=0, mesh=None,
-                        start_step: int = 0) -> Iterator[dict]:
-    ds = SyntheticLM(cfg, global_batch, seq_len, seed, mesh)
+                        start_step: int = 0, striped: bool = True
+                        ) -> Iterator[dict]:
+    ds = SyntheticLM(cfg, global_batch, seq_len, seed, mesh, striped)
     step = start_step
     while True:
         yield ds.batch(step)

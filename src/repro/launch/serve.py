@@ -1,7 +1,16 @@
 """Serving launcher: batched decode server over a (restored) checkpoint.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-        [--ckpt DIR] [--requests 8] [--slots 4]
+        [--ckpt DIR] [--requests 8] [--slots 4] \
+        [--policy fifo|homed] [--pods PxD[xM]]
+
+``--policy`` selects the serving scheduler (`repro.runtime.scheduler`):
+``fifo`` is the arrival-order oracle, ``homed`` routes/batches/evicts by
+each slot's cache home.  ``--pods PxD[xM]`` serves over an emulated-pod
+mesh (run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)
+so the scheduler's inter-pod vs intra-pod relayout split is visible on a
+laptop.  The per-home admission summary prints at exit either way — the
+launcher demonstrates the scheduler without reading code.
 """
 from __future__ import annotations
 
@@ -13,18 +22,55 @@ import jax
 
 from repro.checkpoint import latest_step, restore
 from repro.configs import get_config, reduce_config
+from repro.configs.base import ShapeSpec
 from repro.models.model import LM
 from repro.runtime.server import DecodeServer, Request
 
 
-def main():
+def parse_pods(spec: str):
+    """``PxD`` or ``PxDxM`` -> (n_pods, n_data, n_model)."""
+    parts = [int(p) for p in spec.lower().split("x")]
+    if len(parts) == 2:
+        parts.append(1)
+    if len(parts) != 3 or any(p < 1 for p in parts):
+        raise argparse.ArgumentTypeError(
+            f"--pods wants PxD or PxDxM with positive ints, got {spec!r}")
+    return tuple(parts)
+
+
+def build_plan(pods, slots: int, max_len: int, cfg):
+    """The serving MeshPlan: flat data mesh, or the emulated-pod mesh."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.partition import NULL_PLAN, make_plan
+    n_dev = len(jax.devices())
+    if pods is None:
+        if n_dev == 1:
+            return NULL_PLAN
+        mesh = make_host_mesh(n_data=n_dev, n_model=1)
+    else:
+        p, d, m = pods
+        mesh = make_host_mesh(n_pods=p, n_data=d, n_model=m)
+    return make_plan(mesh, cfg, ShapeSpec("serve", max_len, slots, "decode"))
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
-    args = ap.parse_args()
+    ap.add_argument("--policy", choices=("fifo", "homed"), default="fifo",
+                    help="serving scheduler: arrival-order oracle vs "
+                    "home-aware routing/batching/eviction")
+    ap.add_argument("--pods", type=parse_pods, default=None, metavar="PxD[xM]",
+                    help="serve over an emulated (pod, data, model) mesh")
+    ap.add_argument("--sessions", type=int, default=4,
+                    help="distinct affinity keys in the synthetic stream")
+    ap.add_argument("--prompt-pad", type=int, default=16,
+                    help="fixed prefill pad bucket (wave-composition-"
+                    "independent numerics); 0 = per-wave max")
+    args = ap.parse_args(argv)
 
     cfg = reduce_config(get_config(args.arch), layers=4)
     model = LM(cfg)
@@ -32,15 +78,23 @@ def main():
     if args.ckpt and latest_step(args.ckpt) is not None:
         params = restore(args.ckpt, latest_step(args.ckpt),
                          {"params": params})["params"]
-    srv = DecodeServer(cfg, params, batch_slots=args.slots, max_len=96)
+    plan = build_plan(args.pods, args.slots, 96, cfg)
+    srv = DecodeServer(cfg, params, batch_slots=args.slots, max_len=96,
+                       plan=plan, scheduler=args.policy,
+                       prompt_pad=args.prompt_pad or None)
     rng = np.random.RandomState(0)
     for rid in range(args.requests):
-        srv.submit(Request(rid=rid,
-                           prompt=rng.randint(0, cfg.vocab_size,
-                                              rng.randint(2, 9)).astype(np.int32),
-                           max_new=args.max_new))
-    for r in srv.run():
-        print(f"req {r.rid}: -> {r.out}")
+        plen = rng.randint(2, 9)
+        srv.submit(Request(
+            rid=rid,
+            prompt=rng.randint(0, cfg.vocab_size, plen).astype(np.int32),
+            max_new=int(rng.choice([args.max_new // 2 or 1, args.max_new])),
+            session=f"s{rng.randint(args.sessions)}",
+            t_arrive=float(rid // max(1, args.slots))))
+    for r in sorted(srv.run(), key=lambda r: r.rid):
+        print(f"req {r.rid} (session {r.session}, home {r.home}, "
+              f"wait {r.wait:.0f}): -> {r.out}")
+    print(srv.scheduler.format_summary())
 
 
 if __name__ == "__main__":

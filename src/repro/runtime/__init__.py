@@ -1,4 +1,7 @@
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.runtime.ft import Supervisor
+from repro.runtime.scheduler import (Scheduler, kv_bytes_per_token,
+                                     make_scheduler)
 
-__all__ = ["Trainer", "TrainerConfig", "Supervisor"]
+__all__ = ["Trainer", "TrainerConfig", "Supervisor", "Scheduler",
+           "kv_bytes_per_token", "make_scheduler"]

@@ -1,0 +1,517 @@
+"""Home-aware serving scheduler: admission, batching, eviction by cache home.
+
+PR 2 homed each decode slot's KV cache on the device that computes it
+(`Locale.pin_tree` over the batch-slot axis).  That localises serving
+*state*; this module localises serving *decisions*.  The paper's ownership
+math (`chunk_bounds`: worker w owns one contiguous chunk) is applied to
+decode slots instead of sort chunks: slot s of a B-slot server on an
+N-device locale is *homed* on device `Locale.owners(B)[s]`, and every
+scheduling decision — which home admits a request, which requests form the
+next wave, which cached session is evicted — is made in home terms.
+
+Two policies, selected by ``Scheduler(policy=...)`` (and surfaced as
+``DecodeServer(scheduler=...)`` / ``repro.launch.serve --policy``):
+
+``"fifo"``
+    The oracle: today's behaviour.  One global queue; a wave is the first B
+    queued requests; a request lands on whatever slot frees first, so a
+    recurring session's cached KV prefix is dragged to an arbitrary home
+    almost every time it returns (cross-home relayout), and a burst of
+    long decodes padlocks every slot behind the longest request.
+
+``"homed"``
+    The paper's discipline:
+
+    * **admission** — per-home queues.  A request is routed at arrival to
+      the home its session's KV already lives on (affinity), else to the
+      least-loaded home; it never decodes anywhere but its assigned home.
+    * **batch formation** — at each wave boundary the scheduler picks the
+      step *target* that maximises slot utilisation over the visible
+      queue windows (so short decodes batch with short decodes instead of
+      padlocking behind a long one), then every home fills its own slots
+      from its own queue, front first, with requests fitting the target.
+      A request skipped ``max_skip`` waves forces the target up to its own
+      span — aging bounds staleness.
+    * **spill** — work conservation: a home with free slots and an empty
+      (or drained) queue pulls fitting work from other homes' queues,
+      cheapest relayout first (unbound sessions move free; same-pod donors
+      break ties so a spill crosses DCN only when ICI has nothing to
+      give), and the bytes it does move are charged — measured, not
+      hidden.  A spilled session with work still queued at its bound home
+      takes a one-way *copy* (the canonical cache stays put); it migrates
+      only when nothing remains for it at home.
+    * **eviction/compaction** — per-home LRU over session bindings.  A
+      binding is only ever *dropped* on its own home, never migrated to
+      another home's table: a live cache never moves off its home.
+
+Relayout accounting is analytic, like `engine.exchange_schedule`: moving a
+session with T cached tokens across homes costs ``T * kv_bytes_per_token``
+bytes, split inter-pod vs intra-pod on hierarchical (pod-major) locales.
+Both policies run bit-identical decode compute for the same request set
+(the server's fixed ``prompt_pad`` makes each row's numerics independent
+of wave composition), so the byte/step deltas are pure scheduling wins.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+POLICIES = ("fifo", "homed")
+
+
+def kv_bytes_per_token(cfg) -> int:
+    """Analytic KV-cache bytes one decoded token pins to a slot's home.
+
+    The attention K+V rows per *attention* layer (`cfg.attn_layers` — the
+    full stack for pure-attention families, the sparse subset for hybrids,
+    empty for pure-SSM): the dominant, relayout-priced state.  SSM members
+    carry O(1)-per-sequence state and are ignored, like small replicated
+    leaves in `Locale.pin_tree`.
+    """
+    itemsize = np.dtype(cfg.dtype).itemsize
+    return len(cfg.attn_layers) * 2 * cfg.num_kv_heads * cfg.head_dim \
+        * itemsize
+
+
+@dataclass
+class _Binding:
+    """Where a session's cached KV prefix lives: its *home* and size."""
+    home: int
+    tokens: int
+    last_used: float
+
+
+@dataclass
+class _Entry:
+    req: object
+    skips: int = 0
+
+
+@dataclass
+class HomeStats:
+    admitted: int = 0
+    spilled_in: int = 0
+    spilled_out: int = 0
+    evicted: int = 0
+    relayout_bytes: int = 0      # bytes charged for sessions moved ONTO this home
+
+
+@dataclass
+class ScheduleStats:
+    """Deterministic per-run accounting (wall clock lives in the bench)."""
+    homes: Dict[int, HomeStats] = field(default_factory=dict)
+    waves: int = 0
+    steps: float = 0.0           # wave cost units: prefill rows + decode steps
+    slot_steps: float = 0.0      # n_slots * steps (capacity offered)
+    busy_slot_steps: float = 0.0 # sum over served reqs of their own span
+    waits: List[float] = field(default_factory=list)
+    relayout_bytes: int = 0      # total cross-home session-cache movement
+    inter_pod_bytes: int = 0     # subset crossing a pod boundary
+    intra_pod_bytes: int = 0
+    relayout_events: int = 0
+    served: int = 0
+    tokens_out: int = 0
+
+    def wait_pct(self, q: float) -> float:
+        if not self.waits:
+            return 0.0
+        return float(np.percentile(np.asarray(self.waits), q))
+
+
+class Scheduler:
+    """Route, batch and evict decode requests by KV-cache home.
+
+    ``owners`` maps slot index -> home-device index (``Locale.owners``:
+    `chunk_bounds` applied to slots).  ``homes_per_pod`` is the number of
+    homes per pod on a hierarchical (pod-major) locale — it only affects
+    the inter/intra-pod split of the relayout bytes and the spill donor
+    preference; ``None`` means a flat (single-distance-class) locale.
+    """
+
+    def __init__(self, n_slots: int, owners: Optional[Sequence[int]] = None,
+                 policy: str = "fifo", bytes_per_token: int = 0,
+                 lookahead: int = 8, max_skip: int = 4,
+                 homes_per_pod: Optional[int] = None,
+                 session_capacity: Optional[int] = None,
+                 affinity_slack: Optional[int] = None,
+                 prompt_pad: Optional[int] = None):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; want one of "
+                             f"{POLICIES}")
+        self.policy = policy
+        self.n_slots = n_slots
+        owners = tuple(owners) if owners is not None else (0,) * n_slots
+        if len(owners) != n_slots:
+            raise ValueError(f"owners maps {len(owners)} slots, server has "
+                             f"{n_slots}")
+        self.owners = owners
+        # slots of each home, in slot order — ownership is chunk-contiguous
+        self.slots_of: Dict[int, List[int]] = {}
+        for s, h in enumerate(owners):
+            self.slots_of.setdefault(h, []).append(s)
+        self.homes = sorted(self.slots_of)
+        self.bytes_per_token = bytes_per_token
+        self.lookahead = lookahead
+        self.max_skip = max_skip
+        self.homes_per_pod = homes_per_pod
+        sph = max(len(v) for v in self.slots_of.values())
+        self.session_capacity = (session_capacity if session_capacity
+                                 is not None else 4 * sph)
+        # affinity yields to balance once the bound home's queue runs this
+        # many entries past the least-loaded one (the hot-home relief valve)
+        self.affinity_slack = (affinity_slack if affinity_slack is not None
+                               else 2 * sph)
+        self.prompt_pad = prompt_pad     # the server's fixed prefill bucket
+        self._future: List[Tuple[float, int, object]] = []   # arrival heap
+        self._seq = 0
+        self._fifo: deque = deque()                          # policy="fifo"
+        self._queues: Dict[int, deque] = {h: deque() for h in self.homes}
+        self._bindings: Dict[object, _Binding] = {}
+        self._forked: set = set()          # spill copies that must not rebind
+        self._wave_sites: Dict[object, set] = {}   # session -> homes holding
+        #   a copy of its cache *this wave* (a second request reuses it free)
+        self.stats = ScheduleStats(
+            homes={h: HomeStats() for h in self.homes})
+
+    # ------------------------------------------------------------ submission
+    def submit(self, req) -> None:
+        """Enqueue a request for admission at its arrival time ``t_arrive``."""
+        heapq.heappush(self._future,
+                       (float(getattr(req, "t_arrive", 0.0)), self._seq, req))
+        self._seq += 1
+
+    def has_work(self) -> bool:
+        return bool(self._future or self._fifo
+                    or any(self._queues.values()))
+
+    def clock(self, now: float) -> float:
+        """Advance the clock to the next actionable instant (arrival jump)."""
+        if self._fifo or any(self._queues.values()):
+            return now
+        if self._future:
+            return max(now, self._future[0][0])
+        return now
+
+    def _admit(self, now: float) -> None:
+        while self._future and self._future[0][0] <= now:
+            _, _, req = heapq.heappop(self._future)
+            self._route(req, now)
+
+    def _load(self, h: int) -> int:
+        return len(self._queues[h])
+
+    def _route(self, req, now: float) -> None:
+        if self.policy == "fifo":
+            self._fifo.append(_Entry(req))
+            return
+        b = self._bindings.get(req.session) if req.session is not None else None
+        least = min(self.homes, key=lambda h: (self._load(h), h))
+        if (b is not None and b.home in self._queues
+                and self._load(b.home) - self._load(least)
+                <= self.affinity_slack):
+            home = b.home                       # affinity: stay with the cache
+        else:
+            # no cached home, or the bound home is running hot: balance wins
+            # (any cached prefix is dragged along — charged at admission)
+            home = least
+        req.home = home
+        self._queues[home].append(_Entry(req))
+
+    # ------------------------------------------------------------ relayout
+    def _pod(self, home: int) -> int:
+        return home // self.homes_per_pod if self.homes_per_pod else 0
+
+    def _charge_move(self, req, new_home: int, migrate: bool = True) -> None:
+        """Account the session-cache relayout implied by landing off-home.
+
+        ``migrate=False`` is the *fork* form a spill uses when the session
+        still has work queued on its bound home: the cached prefix is
+        copied to the spill home for this one request (bytes charged) but
+        the canonical cache — and every later request's affinity — stays
+        put, so the session doesn't ping-pong home every wave.
+        """
+        b = self._bindings.get(req.session) if req.session is not None else None
+        if b is None:
+            return
+        sites = self._wave_sites.setdefault(req.session, {b.home})
+        if new_home not in sites and new_home != b.home:
+            nbytes = b.tokens * self.bytes_per_token
+            if nbytes:
+                self.stats.relayout_bytes += nbytes
+                self.stats.relayout_events += 1
+                self.stats.homes[new_home].relayout_bytes += nbytes
+                if self._pod(b.home) != self._pod(new_home):
+                    self.stats.inter_pod_bytes += nbytes
+                else:
+                    self.stats.intra_pod_bytes += nbytes
+        sites.add(new_home)
+        if migrate:
+            b.home = new_home                   # the cache moved with it
+        elif new_home != b.home:
+            self._forked.add(id(req))           # one-way copy; don't rebind
+
+    # ------------------------------------------------------------ formation
+    def _span(self, req) -> int:
+        """A request's slot occupancy in wave steps: prefill rows + decode.
+
+        With a fixed server pad bucket every wave prefills ``prompt_pad``
+        rows regardless of the admitted prompts, so the span that predicts
+        wave cost uses the bucket, not the raw prompt length."""
+        return (self.prompt_pad or len(req.prompt)) + req.max_new
+
+    def _pick_target(self) -> int:
+        """The wave's step target: the span that maximises slot utilisation.
+
+        Candidate targets are the distinct spans visible in the per-home
+        lookahead windows; for each, the admissible work is every windowed
+        entry fitting it (slot-capped per home, spill-eligible across
+        homes), and the wave utilisation is that work over the capacity the
+        wave would offer (``n_slots * target``).  Short decodes therefore
+        batch with short decodes instead of padlocking behind a long one —
+        but an *aged* entry (skipped ``max_skip`` waves) bounds staleness
+        by forcing the target up to its own span.  0 = nothing queued.
+        """
+        windows = [list(self._queues[h])[:self.lookahead]
+                   for h in self.homes]
+        spans = sorted({self._span(e.req) for w in windows for e in w})
+        if not spans:
+            return 0
+        # drain-all guard: when everything queued fits one wave, splitting
+        # it by span class only buys extra prefill waves — take it all
+        if (sum(len(q) for q in self._queues.values()) <= self.n_slots
+                and all(len(q) <= self.lookahead
+                        for q in self._queues.values())):
+            return spans[-1]
+        floor = max((self._span(e.req) for w in windows for e in w
+                     if e.skips >= self.max_skip), default=0)
+        best_t, best_eff = 0, -1.0
+        for t in spans:
+            if t < floor:
+                continue
+            busy, used, pool = 0, 0, []
+            for h, w in zip(self.homes, windows):
+                fits = sorted(self._span(e.req) for e in w
+                              if self._span(e.req) <= t)
+                cap = len(self.slots_of[h])
+                busy += sum(fits[:cap])              # this home's own slots
+                used += min(len(fits), cap)
+                pool += fits[cap:]                   # spill-eligible excess
+            busy += sum(sorted(pool)[:self.n_slots - used])
+            eff = busy / (self.n_slots * t)
+            if eff > best_eff + 1e-12:
+                best_t, best_eff = t, eff
+        return max(best_t, floor)
+
+    def _place(self, placements: List, slot: int, req) -> None:
+        """Admit one request onto one slot: charge the relayout its landing
+        implies (fork vs migrate — see `_charge_move`) and keep the
+        invariant that a request only ever decodes on the home owning its
+        slot."""
+        b = (self._bindings.get(req.session)
+             if req.session is not None else None)
+        migrate = not (b is not None and b.home != req.home
+                       and b.home in self._queues
+                       and any(x.req.session == req.session
+                               for x in self._queues[b.home]))
+        self._charge_move(req, req.home, migrate=migrate)
+        assert self.owners[slot] == req.home         # the invariant
+        placements.append((slot, req))
+
+    def form_wave(self, now: float) -> List[Tuple[int, object]]:
+        """One wave-boundary batch: ``[(slot, request), ...]`` placements.
+
+        Every returned request decodes on the home that owns its slot; the
+        caller serves the wave and then reports it back via `complete`.
+        """
+        self._admit(now)
+        self._wave_sites = {}      # cache copies are per-wave materialised
+        if self.policy == "fifo":
+            wave = []
+            while self._fifo and len(wave) < self.n_slots:
+                req = self._fifo.popleft().req
+                slot = len(wave)                 # whatever slot frees first
+                req.home = self.owners[slot]
+                self._charge_move(req, req.home)
+                wave.append((slot, req))
+            self._record_admission(wave, now)
+            return wave
+
+        placements: List[Tuple[int, object]] = []
+        free: Dict[int, List[int]] = {h: list(self.slots_of[h])
+                                      for h in self.homes}
+        target = self._pick_target()
+        if target == 0:
+            self._record_admission(placements, now)
+            return placements
+        # 2. fill: each home admits from its own queue, front first (bounded
+        # lookahead), every entry whose span fits the target — which
+        # `_pick_target` already raised above every aged entry's span, so
+        # nothing admissible can outgrow the wave mid-fill
+        for h in self.homes:
+            q = self._queues[h]
+            kept: List[_Entry] = []
+            scanned = 0
+            while q and free[h] and scanned < self.lookahead:
+                e = q.popleft()
+                scanned += 1
+                if self._span(e.req) <= target:
+                    self._place(placements, free[h].pop(0), e.req)
+                else:
+                    e.skips += 1
+                    kept.append(e)
+            for e in reversed(kept):
+                q.appendleft(e)
+        # 3. spill: idle capacity pulls fitting work from other queues —
+        # work conservation over strict affinity.  Donor choice minimises
+        # the relayout it causes: unbound (or already-here) sessions move
+        # free, bound ones cost their cached tokens; same-pod donors break
+        # ties so a spill crosses DCN only when ICI has nothing to give.
+        for h in self.homes:
+            while free[h]:
+                pick = None
+                for d in self.homes:
+                    if d == h:
+                        continue
+                    for i, e in enumerate(list(self._queues[d])
+                                          [:self.lookahead]):
+                        if self._span(e.req) > target:
+                            continue
+                        b = (self._bindings.get(e.req.session)
+                             if e.req.session is not None else None)
+                        cost = (0 if b is None or b.home == h
+                                or h in self._wave_sites.get(e.req.session,
+                                                             ())
+                                else b.tokens)
+                        key = (cost, self._pod(d) != self._pod(h),
+                               -len(self._queues[d]), d, i)
+                        if pick is None or key < pick[0]:
+                            pick = (key, d, i)
+                if pick is None:
+                    break
+                _, d, i = pick
+                q = self._queues[d]
+                q.rotate(-i)
+                e = q.popleft()
+                q.rotate(i)
+                e.req.home = h
+                self.stats.homes[d].spilled_out += 1
+                self.stats.homes[h].spilled_in += 1
+                self._place(placements, free[h].pop(0), e.req)
+        placements.sort()
+        self._record_admission(placements, now)
+        return placements
+
+    def _record_admission(self, placements, now: float) -> None:
+        for _slot, req in placements:
+            req.wait = now - float(getattr(req, "t_arrive", 0.0))
+            self.stats.waits.append(req.wait)
+            self.stats.homes[req.home].admitted += 1
+
+    # ------------------------------------------------------------ completion
+    def complete(self, placements, now: float, steps: float) -> None:
+        """Report a served wave: update stats and session bindings (LRU)."""
+        self.stats.waves += 1
+        self.stats.steps += steps
+        self.stats.slot_steps += self.n_slots * steps
+        for _slot, req in placements:
+            self.stats.served += 1
+            self.stats.tokens_out += len(req.out)
+            self.stats.busy_slot_steps += len(req.prompt) + len(req.out)
+            if req.session is None:
+                continue
+            if id(req) in self._forked:
+                # a spill copy: the canonical cache never left its home
+                self._forked.discard(id(req))
+                b = self._bindings.get(req.session)
+                if b is not None:
+                    b.last_used = now
+                continue
+            self._bindings[req.session] = _Binding(
+                home=req.home, tokens=len(req.prompt) + len(req.out),
+                last_used=now)
+            self._evict(req.home, now)
+
+    def _evict(self, home: int, now: float) -> None:
+        """Per-home LRU compaction: drop, never migrate, over-capacity
+        bindings — a cached session leaves its home only by being freed."""
+        mine = [(s, b) for s, b in self._bindings.items() if b.home == home]
+        while len(mine) > self.session_capacity:
+            mine.sort(key=lambda sb: sb[1].last_used)
+            s, _ = mine.pop(0)
+            del self._bindings[s]
+            self.stats.homes[home].evicted += 1
+
+    # ------------------------------------------------------------ reporting
+    def binding_home(self, session) -> Optional[int]:
+        b = self._bindings.get(session)
+        return b.home if b is not None else None
+
+    def utilisation(self) -> float:
+        if not self.stats.slot_steps:
+            return 0.0
+        return self.stats.busy_slot_steps / self.stats.slot_steps
+
+    def summary(self) -> Dict:
+        s = self.stats
+        return {
+            "policy": self.policy,
+            "n_slots": self.n_slots,
+            "n_homes": len(self.homes),
+            "served": s.served,
+            "tokens_out": s.tokens_out,
+            "waves": s.waves,
+            "steps": s.steps,
+            "utilisation": round(self.utilisation(), 4),
+            "wait_p50": s.wait_pct(50.0),
+            "wait_p99": s.wait_pct(99.0),
+            "relayout_bytes": s.relayout_bytes,
+            "inter_pod_bytes": s.inter_pod_bytes,
+            "intra_pod_bytes": s.intra_pod_bytes,
+            "relayout_events": s.relayout_events,
+            "per_home": {h: vars(hs).copy() for h, hs in s.homes.items()},
+        }
+
+    def format_summary(self) -> str:
+        """The launcher's exit report: one line per home, then totals."""
+        s = self.stats
+        lines = [f"# scheduler policy={self.policy} slots={self.n_slots} "
+                 f"homes={len(self.homes)}"
+                 + (f" homes_per_pod={self.homes_per_pod}"
+                    if self.homes_per_pod else ""),
+                 "# home  admitted  spill_in  spill_out  evicted  "
+                 "relayout_bytes"]
+        for h in self.homes:
+            hs = s.homes[h]
+            lines.append(f"#  {h:>3} {hs.admitted:>9} {hs.spilled_in:>9} "
+                         f"{hs.spilled_out:>10} {hs.evicted:>8} "
+                         f"{hs.relayout_bytes:>14}")
+        lines.append(
+            f"# served={s.served} tokens={s.tokens_out} waves={s.waves} "
+            f"steps={s.steps:.0f} util={self.utilisation():.2f} "
+            f"wait_p50={s.wait_pct(50):.1f} wait_p99={s.wait_pct(99):.1f} "
+            f"relayout={s.relayout_bytes}B "
+            f"(inter_pod={s.inter_pod_bytes}B intra_pod={s.intra_pod_bytes}B)")
+        return "\n".join(lines)
+
+
+def make_scheduler(policy: str, n_slots: int, locale=None, cfg=None,
+                   prompt_pad: Optional[int] = None, **kw) -> Scheduler:
+    """Build a scheduler from a `Locale` — the ownership map is
+    `locale.owners(n_slots)` (the engine's `chunk_bounds` applied to slots)
+    and the pod split comes from the locale's (outer, ..., inner) axes."""
+    owners = locale.owners(n_slots) if locale is not None else None
+    homes_per_pod = None
+    if locale is not None and locale.mesh is not None:
+        from repro.core.homing import axis_tuple
+        axes = axis_tuple(locale.axis)
+        if len(axes) > 1:
+            homes_per_pod = math.prod(locale.mesh.shape[a] for a in axes[1:])
+    bpt = kv_bytes_per_token(cfg) if cfg is not None else 0
+    return Scheduler(n_slots=n_slots, owners=owners, policy=policy,
+                     bytes_per_token=bpt, homes_per_pod=homes_per_pod,
+                     prompt_pad=prompt_pad, **kw)

@@ -11,21 +11,34 @@ axis (`Locale.pin_tree` inside the jitted step), so a slot's cache lives
 wholly on the device that decodes it instead of being re-laid-out by the
 compiler per decode step — the paper's one-shot localisation applied to
 serving state.
+
+*Which* request lands on which slot is the scheduler's decision
+(`repro.runtime.scheduler`): ``scheduler="fifo"`` is the arrival-order
+oracle (today's behaviour — a wave is the first B queued requests),
+``scheduler="homed"`` routes/batches/evicts by the slot ownership map
+`Locale.owners` so a request only ever decodes on its assigned home.
+
+``prompt_pad`` fixes the prefill left-pad length for every wave (instead
+of the per-wave max).  With a fixed pad, each batch row's tokens occupy
+the same positions regardless of which other requests share the wave, and
+rows never mix in the model — so decode outputs are bit-identical across
+scheduling policies for the same request set (the fifo-vs-homed oracle
+check), at the cost of prefilling the pad bucket.  ``prompt_pad=None``
+keeps the per-wave-max behaviour.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.api import Locale
 from repro.models.model import LM
+from repro.runtime.scheduler import Scheduler, make_scheduler
 from repro.sharding.partition import MeshPlan, NULL_PLAN
 
 
@@ -36,18 +49,24 @@ class Request:
     max_new: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
+    session: Optional[object] = None  # affinity key (prefix/session KV reuse)
+    t_arrive: float = 0.0        # open-loop arrival, in wave-step units
+    home: Optional[int] = None   # assigned home device (set at admission)
+    wait: Optional[float] = None # admission wait in wave-step units
 
 
 class DecodeServer:
     def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
                  max_len: int = 128, plan: MeshPlan = NULL_PLAN,
-                 greedy: bool = True, locale: Optional[Locale] = None):
+                 greedy: bool = True, locale: Optional[Locale] = None,
+                 scheduler: Union[str, Scheduler] = "fifo",
+                 prompt_pad: Optional[int] = None):
         assert cfg.embed_input, "server serves token LMs"
         self.cfg, self.params, self.plan = cfg, params, plan
         self.B, self.max_len = batch_slots, max_len
         self.model = LM(cfg)
-        self.queue: List[Request] = []
         self.greedy = greedy
+        self.prompt_pad = prompt_pad
         if locale is None:
             # home cache slots over the plan's batch axes; degenerate
             # (no-op) locale when the plan has no mesh or no batch sharding.
@@ -59,6 +78,14 @@ class DecodeServer:
             locale = (Locale(mesh=plan.mesh, axis=slot_axes)
                       if slot_axes else Locale(mesh=None))
         self.locale = locale
+        if isinstance(scheduler, str):
+            scheduler = make_scheduler(scheduler, n_slots=self.B,
+                                       locale=self.locale, cfg=cfg,
+                                       prompt_pad=prompt_pad)
+        if scheduler.n_slots != self.B:
+            raise ValueError(f"scheduler manages {scheduler.n_slots} slots, "
+                             f"server has {self.B}")
+        self.scheduler = scheduler
 
         def _step(p, c, b, pos):
             logits, c2 = self.model.decode_step(p, c, b, pos, plan)
@@ -70,42 +97,78 @@ class DecodeServer:
         self._decode = self.locale.jit(_step, donate=(1,))
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        if self.prompt_pad is not None and len(req.prompt) > self.prompt_pad:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} exceeds "
+                f"prompt_pad={self.prompt_pad}")
+        self.scheduler.submit(req)
 
-    def _wave(self, reqs: List[Request]) -> List[Request]:
-        """Serve one aligned wave: common-length prefill + decode to done."""
-        B = len(reqs)
-        plen = max(1, max(len(r.prompt) for r in reqs))
+    def _serve_wave(self, placements) -> Tuple[List[Request], float]:
+        """Serve one aligned wave of slot-placed requests.
+
+        The batch always carries all B slot rows (empty slots hold a dummy
+        token row — one compiled shape for every wave); a row's computation
+        never depends on the other rows, so each request's tokens are a
+        function of its own prompt alone.  Returns the served requests and
+        the wave's cost in step units (prefill rows + forward steps).
+        """
+        B = self.B
+        reqs: List[Optional[Request]] = [None] * B
+        for slot, r in placements:
+            reqs[slot] = r
+        active = [r for r in reqs if r is not None]
+        plen = (self.prompt_pad if self.prompt_pad is not None
+                else max(1, max(len(r.prompt) for r in active)))
         toks = np.zeros((B, plen), np.int32)
-        for i, r in enumerate(reqs):  # left-pad with token 0
-            toks[i, plen - len(r.prompt):] = r.prompt
+        for i, r in enumerate(reqs):             # left-pad with token 0
+            if r is not None:
+                toks[i, plen - len(r.prompt):] = r.prompt
         last, caches = self.model.prefill(
             self.params, {"tokens": jnp.asarray(toks)}, self.plan,
             max_len=self.max_len)
         pos = plen
         cur = np.asarray(jnp.argmax(last, -1)) if self.greedy else None
         for i, r in enumerate(reqs):
-            r.out.append(int(cur[i]))
-        max_new = max(r.max_new for r in reqs)
+            if r is not None:
+                r.out.append(int(cur[i]))
+        steps = 1
+        max_new = max(r.max_new for r in active)
         for _ in range(max_new - 1):
             batch = {"tokens": jnp.asarray(cur[:, None].astype(np.int32))}
             logits, caches = self._decode(self.params, caches, batch,
                                           jnp.int32(pos))
             cur = np.asarray(jnp.argmax(logits, -1))
             pos += 1
+            steps += 1
             for i, r in enumerate(reqs):
+                if r is None:
+                    continue
                 if len(r.out) < r.max_new and not r.done:
                     r.out.append(int(cur[i]))
             if pos >= self.max_len:
                 break
-        for r in reqs:
+        for r in active:
             r.done = True
-        return reqs
+        return active, float(plen + steps)
 
     def run(self) -> List[Request]:
-        """Drain the queue in slot-sized waves (continuous re-batching)."""
-        served = []
-        while self.queue:
-            wave, self.queue = self.queue[:self.B], self.queue[self.B:]
-            served += self._wave(wave)
+        """Drain the queues in slot-sized waves (continuous re-batching).
+
+        The scheduler decides wave membership and slot placement; the
+        simulated clock advances by each wave's step cost, so open-loop
+        arrivals (``Request.t_arrive``) and admission waits are measured in
+        the same deterministic units across policies.
+        """
+        served: List[Request] = []
+        sch = self.scheduler
+        now = 0.0
+        while sch.has_work():
+            now = sch.clock(now)
+            wave = sch.form_wave(now)
+            if not wave:          # future arrivals only — jump, then retry
+                continue
+            reqs, cost = self._serve_wave(wave)
+            sch.complete(wave, now, cost)
+            now += cost
+            served += reqs
         return served

@@ -373,3 +373,15 @@ def test_benchmarks_smoke_emits_json(tmp_path):
         return int(re.search(r"inter_total=(\d+)", recs[0]["derived"]).group(1))
 
     assert inter_total("_hier.") < inter_total("_nonloc-")
+    # the serving scheduler ran too: both policies timed, and the recorded
+    # acceptance facts hold (bit-identical decode, homed strictly fewer
+    # cross-home relayout bytes, homed no more deterministic steps)
+    serve = json.load(open(tmp_path / "BENCH_serve.json"))
+    assert {r["name"].split("_")[1] for r in serve
+            if r["us"] is not None} >= {"fifo", "homed"}
+    checks = [r for r in serve if r["name"].startswith("serve_check_")]
+    assert checks, serve
+    for rec in checks:
+        assert "bit_identical=True" in rec["derived"], rec
+        assert "relayout_homed_lt_fifo=True" in rec["derived"], rec
+        assert "steps_homed_le_fifo=True" in rec["derived"], rec

@@ -1,0 +1,320 @@
+"""Home-aware serving scheduler tests.
+
+Fast tier: the scheduler is a pure-Python decision layer, so routing,
+batch formation, spill, aging and eviction are tested without jax; one
+small single-device server integration pins the fifo-vs-homed bit-exact
+contract on real decode.  Multi-device servers (8-dev flat mesh, the
+(2,2,2) emulated-pod mesh) run in subprocesses and are marked slow.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.api import Locale
+from repro.runtime.scheduler import Scheduler, kv_bytes_per_token
+from repro.runtime.server import DecodeServer, Request
+
+from helpers import tiny
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def req(rid, plen=4, max_new=4, session=None, t=0.0):
+    return Request(rid=rid, prompt=np.arange(plen, dtype=np.int32) % 7 + 1,
+                   max_new=max_new, session=session, t_arrive=t)
+
+
+def drive(sch: Scheduler, reqs, pad=8):
+    """Run the scheduling loop with the server's cost model, no model."""
+    for r in reqs:
+        sch.submit(r)
+    now, placements_log = 0.0, []
+    while sch.has_work():
+        now = sch.clock(now)
+        wave = sch.form_wave(now)
+        if not wave:
+            continue
+        active = [r for _, r in wave]
+        cost = pad + max(r.max_new for r in active)
+        for r in active:
+            r.out = list(range(r.max_new))
+            r.done = True
+        sch.complete(wave, now, cost)
+        placements_log.append(list(wave))
+        now += cost
+    return placements_log
+
+
+def stream(n, sessions=4, seed=0, short=4, long=24, slots=8, pad=8):
+    rng = np.random.RandomState(seed)
+    w = 1.0 / (1.0 + np.arange(sessions))
+    w /= w.sum()
+    return [req(i, plen=int(rng.randint(2, pad + 1)),
+                max_new=int(long if rng.rand() < 0.3 else short),
+                session=f"s{rng.choice(sessions, p=w)}",
+                t=float(i // (2 * slots)) * (pad + short))
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# ownership map
+# ---------------------------------------------------------------------------
+def test_locale_owners_is_chunk_bounds_ownership():
+    # degenerate locale: one device owns every slot
+    assert Locale(mesh=None).owners(4) == (0, 0, 0, 0)
+    # the scheduler consumes the same map chunk-contiguously
+    sch = Scheduler(8, owners=(0, 0, 1, 1, 2, 2, 3, 3))
+    assert sch.homes == [0, 1, 2, 3]
+    assert sch.slots_of[2] == [4, 5]
+    # non-divisible slot counts clip like chunk_bounds (trailing home empty)
+    sch = Scheduler(3, owners=(0, 0, 1))
+    assert sch.slots_of == {0: [0, 1], 1: [2]}
+
+
+def test_scheduler_validation():
+    with pytest.raises(ValueError, match="unknown policy"):
+        Scheduler(4, policy="sjf")
+    with pytest.raises(ValueError, match="owners maps"):
+        Scheduler(4, owners=(0, 1))
+
+
+def test_kv_bytes_per_token_is_analytic_cache_row():
+    cfg = tiny("qwen3-0.6b")          # pure attention: every layer holds KV
+    want = cfg.num_layers * 2 * cfg.num_kv_heads * cfg.head_dim \
+        * np.dtype(cfg.dtype).itemsize
+    assert kv_bytes_per_token(cfg) == want > 0
+    # hybrids price only their attention layers; pure SSM pins no KV at all
+    hybrid = tiny("jamba-1.5-large-398b")
+    assert 0 < len(hybrid.attn_layers) < hybrid.num_layers
+    assert kv_bytes_per_token(hybrid) == len(hybrid.attn_layers) * 2 \
+        * hybrid.num_kv_heads * hybrid.head_dim \
+        * np.dtype(hybrid.dtype).itemsize
+    assert kv_bytes_per_token(tiny("mamba2-2.7b")) == 0
+
+
+# ---------------------------------------------------------------------------
+# policies: formation, routing, invariants
+# ---------------------------------------------------------------------------
+def test_fifo_is_arrival_order_into_freeing_slots():
+    sch = Scheduler(4, owners=(0, 0, 1, 1), policy="fifo")
+    rs = [req(i) for i in range(6)]
+    log = drive(sch, rs)
+    assert [[r.rid for _, r in wave] for wave in log] == [[0, 1, 2, 3], [4, 5]]
+    # a fifo request's home is whatever slot freed first, not its session's
+    assert [r.home for _, r in log[0]] == [0, 0, 1, 1]
+
+
+def test_homed_never_decodes_off_assigned_home():
+    sch = Scheduler(8, owners=(0, 0, 1, 1, 2, 2, 3, 3), policy="homed",
+                    bytes_per_token=4)
+    log = drive(sch, stream(40, sessions=5, seed=3))
+    placed = 0
+    for wave in log:
+        for slot, r in wave:
+            assert sch.owners[slot] == r.home       # the invariant
+            placed += 1
+    assert placed == 40 and sch.stats.served == 40
+
+
+def test_homed_affinity_routes_to_bound_home():
+    sch = Scheduler(4, owners=(0, 0, 1, 1), policy="homed", bytes_per_token=2)
+    drive(sch, [req(0, session="a")])
+    h = sch.binding_home("a")
+    assert h is not None
+    # quiet queues: the session's next request must go home, and a fresh
+    # session must balance onto the other home
+    r1, r2 = req(1, session="a"), req(2, session="b")
+    for r in (r1, r2):
+        sch.submit(r)
+    sch.form_wave(100.0)
+    assert r1.home == h and r2.home != h
+    # and staying home costs nothing
+    assert sch.stats.relayout_bytes == 0
+
+
+def test_homed_spill_is_work_conserving_and_charged():
+    # every request is one hot session -> all routed to one home; the other
+    # home must pull work over (and pay for the bound cache it drags)
+    sch = Scheduler(4, owners=(0, 0, 1, 1), policy="homed", bytes_per_token=8,
+                    affinity_slack=100)
+    drive(sch, [req(9, session="hot")])          # bind the session first
+    rs = [req(i, session="hot", max_new=4, t=50.0) for i in range(4)]
+    log = drive(sch, rs)
+    assert len(log) == 1, "spill must fill both homes in one wave"
+    homes_used = {r.home for _, r in log[0]}
+    assert homes_used == {0, 1}
+    spilled = sum(hs.spilled_in for hs in sch.stats.homes.values())
+    assert spilled >= 1
+    assert sch.stats.relayout_events >= 1   # the dragged binding was charged
+    for wave in log:                        # invariant survives re-homing
+        for slot, r in wave:
+            assert sch.owners[slot] == r.home
+
+
+def test_homed_packing_beats_fifo_on_bimodal_stream():
+    """The acceptance shape, deterministically: fewer steps, fewer bytes."""
+    results = {}
+    for policy in ("fifo", "homed"):
+        sch = Scheduler(16, owners=tuple(h for h in range(8) for _ in "xx"),
+                        policy=policy, bytes_per_token=128, prompt_pad=8)
+        drive(sch, stream(48, sessions=6, seed=0, slots=16))
+        results[policy] = sch.stats
+    f, h = results["fifo"], results["homed"]
+    assert h.steps < f.steps, (h.steps, f.steps)
+    assert h.relayout_bytes < f.relayout_bytes
+    assert h.wait_pct(50) <= f.wait_pct(50)
+    assert f.served == h.served == 48
+
+
+def test_homed_aging_bounds_starvation():
+    # a lone long decode amid a steady diet of shorts is admitted within
+    # max_skip skipped waves, not deferred forever
+    sch = Scheduler(2, owners=(0, 0), policy="homed", max_skip=2,
+                    prompt_pad=4)
+    rs = [req(0, max_new=32, session="long")] \
+        + [req(i, max_new=2, session=f"s{i}") for i in range(1, 12)]
+    log = drive(sch, rs)
+    served_at = next(i for i, wave in enumerate(log)
+                     if any(r.rid == 0 for _, r in wave))
+    assert served_at <= 3, f"long request starved for {served_at} waves"
+
+
+def test_eviction_is_per_home_lru_and_never_migrates():
+    sch = Scheduler(4, owners=(0, 0, 1, 1), policy="homed",
+                    bytes_per_token=2, session_capacity=1)
+    drive(sch, [req(0, session="a", t=0.0)])
+    h_a = sch.binding_home("a")
+    # a second session completing on the same home evicts the LRU binding
+    r_b = req(1, session="b", t=50.0)
+    sch.submit(r_b)
+    wave = sch.form_wave(50.0)
+    # force b onto a's home for the test regardless of balance
+    assert any(r.rid == 1 for _, r in wave)
+    sch.complete(wave, 50.0, 8.0)
+    if r_b.home == h_a:
+        assert sch.binding_home("a") is None       # dropped on its own home…
+        evicted = sum(hs.evicted for hs in sch.stats.homes.values())
+        assert evicted == 1
+    # …and the survivor's binding never moved off the home it was made on
+    assert sch.binding_home("b") == r_b.home
+
+
+# ---------------------------------------------------------------------------
+# server integration (single device, fast)
+# ---------------------------------------------------------------------------
+def test_server_policies_decode_bit_identical_and_report():
+    cfg = tiny("qwen3-0.6b", layers=1)
+    from repro.models.model import LM
+    import jax
+    params = LM(cfg).init(jax.random.key(0))
+    outs, scheds = {}, {}
+    for policy in ("fifo", "homed"):
+        srv = DecodeServer(cfg, params, batch_slots=2, max_len=32,
+                           scheduler=policy, prompt_pad=6)
+        for r in stream(5, sessions=2, seed=1, short=2, long=5,
+                        slots=2, pad=6):
+            srv.submit(r)
+        served = srv.run()
+        assert all(r.done for r in served)
+        assert all(r.home is not None and r.wait is not None for r in served)
+        outs[policy] = {r.rid: r.out for r in served}
+        scheds[policy] = srv.scheduler
+    assert outs["fifo"] == outs["homed"]        # scheduling never leaks into
+    assert scheds["homed"].stats.steps <= scheds["fifo"].stats.steps
+    # the launcher's exit report renders without a mesh too
+    txt = scheds["homed"].format_summary()
+    assert "policy=homed" in txt and "relayout=" in txt
+
+
+def test_server_rejects_prompt_longer_than_pad():
+    cfg = tiny("qwen3-0.6b", layers=1)
+    from repro.models.model import LM
+    import jax
+    params = LM(cfg).init(jax.random.key(0))
+    srv = DecodeServer(cfg, params, batch_slots=2, max_len=32, prompt_pad=4)
+    with pytest.raises(ValueError, match="exceeds prompt_pad"):
+        srv.submit(req(0, plen=6))
+
+
+# ---------------------------------------------------------------------------
+# multi-device servers (subprocess; slow)
+# ---------------------------------------------------------------------------
+_SERVE_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from repro.configs import get_config, reduce_config
+from repro.configs.base import ShapeSpec
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import LM
+from repro.runtime.server import DecodeServer, Request
+from repro.sharding.partition import make_plan
+
+MESH = {mesh!r}
+cfg = reduce_config(get_config("qwen3-0.6b"), layers=1)
+params = LM(cfg).init(jax.random.key(0))
+if MESH == "flat":
+    mesh = make_host_mesh(n_data=8, n_model=1)
+else:
+    mesh = make_host_mesh(n_pods=2, n_data=2, n_model=2)
+plan = make_plan(mesh, cfg, ShapeSpec("serve", 32, 16, "decode"))
+
+def make_stream():
+    rng = np.random.RandomState(0)
+    w = 1.0 / (1.0 + np.arange(4)); w /= w.sum()
+    return [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size,
+                                       rng.randint(2, 7)).astype(np.int32),
+                    max_new=int(12 if rng.rand() < 0.3 else 3),
+                    session=f"s{{rng.choice(4, p=w)}}",
+                    t_arrive=float(i // 16))
+            for i in range(24)]
+
+outs, scheds = {{}}, {{}}
+for policy in ("fifo", "homed"):
+    srv = DecodeServer(cfg, params, batch_slots=16, max_len=32, plan=plan,
+                       scheduler=policy, prompt_pad=6)
+    n_homes = len(srv.scheduler.homes)
+    for r in make_stream():
+        srv.submit(r)
+    served = srv.run()
+    owners = srv.locale.owners(srv.B)
+    for r in served:                      # every request stayed on its home
+        assert r.home is not None and r.home in srv.scheduler.homes
+    outs[policy] = {{r.rid: tuple(r.out) for r in served}}
+    scheds[policy] = srv.scheduler
+
+f, h = scheds["fifo"].stats, scheds["homed"].stats
+assert n_homes == (8 if MESH == "flat" else 4), n_homes
+assert outs["fifo"] == outs["homed"], "policies diverged"
+assert h.relayout_bytes < f.relayout_bytes, (h.relayout_bytes,
+                                             f.relayout_bytes)
+assert h.steps <= f.steps, (h.steps, f.steps)
+if MESH != "flat":
+    assert scheds["homed"].homes_per_pod == 2
+    assert h.inter_pod_bytes <= f.inter_pod_bytes
+print("SERVE_SCHED_OK", MESH, int(f.relayout_bytes), int(h.relayout_bytes))
+"""
+
+
+def _run_sub(code):
+    return subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=900,
+                          env={**os.environ, "PYTHONPATH": "src"}, cwd=ROOT)
+
+
+@pytest.mark.slow
+def test_serve_homed_vs_fifo_flat_8dev():
+    r = _run_sub(_SERVE_CODE.format(mesh="flat"))
+    assert "SERVE_SCHED_OK flat" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_serve_homed_vs_fifo_pods_222():
+    """The (2,2,2) emulated-pod smoke: 4 homes (pod-major), model axis 2."""
+    r = _run_sub(_SERVE_CODE.format(mesh="pods"))
+    assert "SERVE_SCHED_OK pods" in r.stdout, r.stdout + r.stderr
