@@ -13,6 +13,13 @@ than PCT percent — wire it between a committed baseline and a fresh
 Structure-only records (``us == null``: HLO byte counts, exchange-schedule
 rows, serving wait/relayout rows) carry no wall-clock and are skipped.
 
+When both runs were produced with ``run.py --check``, the static verdicts
+are gated too: a case whose baseline record says ``"homecheck": "clean"``
+but whose new record says ``"findings:N"`` (or ``"failed"``) fails the
+compare regardless of wall-clock — a locality regression is a regression
+even when it happens to be fast.  Records without the field (old
+baselines, runs without ``--check``) are not gated.
+
 Serving throughput is gated the same way: ``BENCH_serve.json``'s timed
 ``serve_<policy>_<mesh>`` rows store *us per generated token*, so "NEW is
 slower" means fewer tokens per second and ``--fail-above`` catches a
@@ -34,6 +41,20 @@ def load(path: str) -> Dict[str, float]:
     with open(path) as f:
         records = json.load(f)
     return {r["name"]: r["us"] for r in records if r.get("us") is not None}
+
+
+def load_checks(path: str) -> Dict[str, str]:
+    """name -> homecheck verdict for records stamped by `run.py --check`."""
+    with open(path) as f:
+        records = json.load(f)
+    return {r["name"]: r["homecheck"] for r in records if "homecheck" in r}
+
+
+def check_regressions(base_chk: Dict[str, str],
+                      new_chk: Dict[str, str]) -> Dict[str, str]:
+    """Cases that were homecheck-clean in base but are not in new."""
+    return {n: new_chk[n] for n in sorted(base_chk.keys() & new_chk.keys())
+            if base_chk[n] == "clean" and new_chk[n] != "clean"}
 
 
 def compare(base: Dict[str, float], new: Dict[str, float]) -> List[Dict]:
@@ -67,9 +88,18 @@ def main(argv=None) -> int:
         print(f"# only-in-base: {name}")
     for name in sorted(new.keys() - base.keys()):
         print(f"# only-in-new: {name}")
+    rc = 0
+    dirty = check_regressions(load_checks(args.base), load_checks(args.new))
+    for name, verdict in dirty.items():
+        print(f"# homecheck-regression: {name}: clean -> {verdict}",
+              file=sys.stderr)
+    if dirty:
+        print(f"# FAIL: {len(dirty)} previously homecheck-clean case(s) "
+              f"gained findings", file=sys.stderr)
+        rc = 1
     if not rows:
         print("# no common timed cases", file=sys.stderr)
-        return 2
+        return rc or 2
     worst = rows[0]
     print(f"# {len(rows)} common cases; worst delta "
           f"{worst['delta_pct']:+.1f}% ({worst['name']})")
@@ -77,8 +107,8 @@ def main(argv=None) -> int:
         bad = [r["name"] for r in rows if r["delta_pct"] > args.fail_above]
         print(f"# FAIL: {len(bad)} case(s) regressed more than "
               f"{args.fail_above:.1f}%: {', '.join(bad)}", file=sys.stderr)
-        return 1
-    return 0
+        rc = 1
+    return rc
 
 
 if __name__ == "__main__":

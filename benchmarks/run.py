@@ -12,6 +12,12 @@ run in-process with their stdout captured so their CSV reaches
 
 ``--smoke`` runs every entry point at toy sizes on 2 placeholder devices —
 fast enough for the test suite, so the benchmark surface can't silently rot.
+
+``--check`` runs the homecheck static analyzer (rules R1-R4, see
+`repro.analysis`) over each bench family *before* timing it and stamps the
+verdict (``"homecheck": "clean"`` / ``"findings:N"`` / ``"failed"``) into
+every record the family contributes to BENCH_*.json; ``compare.py`` then
+fails a PR whose previously clean case gained findings.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ import io
 import json
 import os
 import re
+import subprocess
 import sys
 
 from benchmarks.common import run_with_devices
@@ -69,6 +76,64 @@ SMOKE_ARGS = {
     "bench_kernels": ["--only", "local,merge", "--chunks", "2",
                       "--logcs", "8"],
 }
+
+# --check: homecheck CLI argv per bench family ("{D}" = device count).
+# Each entry lowers the family's workload/policy surface and runs rules
+# R1-R4 (repro.analysis) on the partitioned HLO — nothing times until the
+# home contract holds.  Families with no collective surface of their own
+# (striping/roofline are local-copy sweeps) map to an empty list.
+CHECK_ARGS = {
+    "bench_microbench": [["--workload", "microbench", "--pods", "1x{D}",
+                          "--policy", "all"]],
+    "bench_sort_cases": [["--workload", "sort", "--pods", "1x{D}",
+                          "--policy", "all"],
+                         ["--workload", "sort", "--pods", "1x{D}",
+                          "--backend", "constraint"]],
+    "bench_sort_pods": [["--workload", "sort", "--pods", "{PODS}",
+                         "--policy", "all"]],
+    "bench_sort_sizes": [["--workload", "sort", "--pods", "1x{D}"]],
+    "bench_striping": [],
+    "bench_serve": [["--workload", "serve", "--pods", "{SERVE}"]],
+    "bench_serve_pods": [["--workload", "serve", "--pods", "{PODS}"]],
+    "bench_kernels": [["--workload", "sort"]],   # single device: R3/R4
+    "bench_roofline": [],
+}
+# substitutions for the full (8-device) harness vs --smoke (2 devices)
+CHECK_SUBST = {
+    False: {"{D}": "8", "{PODS}": "2x2x2", "{SERVE}": "1x4x2"},
+    True: {"{D}": "2", "{PODS}": "2x1", "{SERVE}": "1x2"},
+}
+
+_CHECK_SUMMARY_RE = re.compile(
+    r"homecheck: (\d+) target\(s\), (\d+) finding\(s\), (\d+) error\(s\)")
+
+
+def run_homecheck(key: str, smoke: bool, timeout: int = 600) -> str:
+    """Run the family's homecheck sweep; "clean" | "findings:N" | "failed".
+
+    The CLI subprocess sets its own XLA_FLAGS from --pods, so the harness
+    process keeps its single real device (same discipline as the benches).
+    """
+    subst = CHECK_SUBST[smoke]
+    findings = 0
+    for argv in CHECK_ARGS.get(key, []):
+        for k, v in subst.items():
+            argv = [a.replace(k, v) for a in argv]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.homecheck", *argv],
+            capture_output=True, text=True, timeout=timeout, env=env)
+        m = _CHECK_SUMMARY_RE.search(r.stdout)
+        if r.returncode not in (0, 1) or m is None:
+            print(f"# homecheck {key} DRIVER FAILURE:\n{r.stderr[-2000:]}",
+                  file=sys.stderr)
+            return "failed"
+        findings += int(m.group(2))
+        if int(m.group(2)):
+            sys.stdout.write(r.stdout)
+    return "clean" if findings == 0 else f"findings:{findings}"
+
 
 # json targets: which CSV prefixes land in which BENCH_*.json
 JSON_FILES = {
@@ -159,23 +224,44 @@ def main(argv=None) -> None:
                     help="directory for BENCH_*.json")
     ap.add_argument("--skip-local", action="store_true",
                     help="skip the single-process (non-mesh) benches")
+    ap.add_argument("--check", action="store_true",
+                    help="run homecheck (R1-R4) over each bench family "
+                         "before timing it; the verdict is stamped into "
+                         "every BENCH_*.json record")
     args = ap.parse_args(argv)
     n_devices = 2 if args.smoke else 8
     records = []
+
+    def precheck(key):
+        """Homecheck the family before timing it; None when not checking."""
+        if not args.check:
+            return None
+        status = run_homecheck(key, smoke=args.smoke)
+        print(f"# homecheck[{key}]: {status}", flush=True)
+        return status
+
+    def stamp(rows, status):
+        if status is not None:
+            for r in rows:
+                r["homecheck"] = status
+        return rows
+
     for key, mod, desc in MULTIDEV:
         print(f"# === {key}: {desc} ===", flush=True)
         extra = (SMOKE_ARGS.get(key, []) if args.smoke
                  else FULL_ARGS.get(key, []))
+        status = precheck(key)
         out = run_with_devices(mod, n_devices=n_devices, args=extra)
         sys.stdout.write(out)
         sys.stdout.flush()
-        records += parse_records(out)
+        records += stamp(parse_records(out), status)
     if not args.skip_local:
         for mod, desc in LOCAL:
             print(f"# === {mod}: {desc} ===", flush=True)
+            status = precheck(mod)
             out = run_local(mod, SMOKE_ARGS.get(mod, []) if args.smoke
                             else FULL_ARGS.get(mod, []))
-            records += parse_records(out)
+            records += stamp(parse_records(out), status)
     write_json(records, args.out)
 
 

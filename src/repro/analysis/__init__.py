@@ -1,0 +1,21 @@
+"""homecheck — static locality analysis for compiled workloads.
+
+Proves, before anything runs, that a lowered program respects its
+cache-home contract:
+
+  R1 surprise-collective   HLO collectives == exchange_schedule's budget
+  R2 home-leak             device groups never span undeclared mesh axes
+  R3 vmem-budget           pallas_call footprints fit per-core VMEM
+  R4 donation-audit        large step-carried buffers are donated
+
+Entry points: `Locale.check(...)` (repro.core.api), `check_workload` /
+`check_decode` / `check_artifacts` here, and the `launch/homecheck.py`
+CLI.  See README "Static analysis".
+"""
+from repro.analysis.findings import (RULES, Finding, Report, Severity,
+                                     summarize)
+from repro.analysis.homecheck import (check_artifacts, check_decode,
+                                      check_workload)
+
+__all__ = ["Finding", "Report", "Severity", "RULES", "summarize",
+           "check_artifacts", "check_decode", "check_workload"]

@@ -1,0 +1,122 @@
+"""Typed findings for the homecheck static locality analyzer.
+
+A `Finding` is one violation of the cache-home contract, tagged with the
+rule that produced it (R1-R4), a severity, the offending op, and the
+predicted-vs-actual byte counts where the rule is quantitative.  A `Report`
+bundles the findings of one analyzed program together with the context
+(workload, policy, mesh) they were produced under; ``report.clean`` is the
+CI contract — no findings at WARN severity or above.
+"""
+from __future__ import annotations
+
+import enum
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class Severity(enum.IntEnum):
+    """Ordered: higher is worse.  ERROR fails CI (CLI exit 1)."""
+    INFO = 0
+    WARN = 1
+    ERROR = 2
+
+
+RULES = {
+    "R1": "surprise-collective: HLO collective not budgeted by "
+          "exchange_schedule (kind/count/bytes diff)",
+    "R2": "home-leak: collective device groups vary over a mesh axis the "
+          "locale never declared (GSPMD resharding of homed values)",
+    "R3": "vmem-budget: pallas_call block+scratch footprint exceeds the "
+          "per-core VMEM ceiling",
+    "R4": "donation-audit: large non-donated buffer copied across steps "
+          "(an output with the exact shape of a non-aliased input)",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str                       # "R1".."R4"
+    severity: Severity
+    op: str                         # HLO opcode / primitive name
+    shape: str = ""                 # offending value's type string
+    predicted_bytes: Optional[float] = None
+    actual_bytes: Optional[float] = None
+    message: str = ""
+
+    def format(self) -> str:
+        pa = ""
+        if self.predicted_bytes is not None or self.actual_bytes is not None:
+            fmt = lambda b: "-" if b is None else f"{b:,.0f}B"
+            pa = (f" predicted={fmt(self.predicted_bytes)}"
+                  f" actual={fmt(self.actual_bytes)}")
+        shape = f" {self.shape}" if self.shape else ""
+        return (f"[{self.rule} {self.severity.name}] {self.op}{shape}{pa}"
+                f" — {self.message}")
+
+
+@dataclass
+class Report:
+    """Findings of one homecheck run plus the context they apply to."""
+    target: str                                  # e.g. "sort[shard_map]"
+    context: Dict = field(default_factory=dict)  # policy/mesh/n/backend...
+    findings: List[Finding] = field(default_factory=list)
+    suppressed: List[str] = field(default_factory=list)   # rule ids filtered
+    notes: List[str] = field(default_factory=list)        # e.g. "R1 skipped"
+
+    def add(self, finding: Finding) -> None:
+        self.findings.append(finding)
+
+    @property
+    def clean(self) -> bool:
+        """No findings at WARN or above — the CI-gating predicate."""
+        return not any(f.severity >= Severity.WARN for f in self.findings)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == Severity.ERROR]
+
+    def suppress(self, rules: Sequence[str]) -> "Report":
+        """Drop findings of the given rule ids (recorded in `suppressed`)."""
+        rules = tuple(rules or ())
+        if not rules:
+            return self
+        kept = [f for f in self.findings if f.rule not in rules]
+        dropped = sorted({f.rule for f in self.findings if f.rule in rules})
+        self.findings = kept
+        self.suppressed.extend(dropped)
+        return self
+
+    def format(self, verbose: bool = False) -> str:
+        head = f"homecheck {self.target}"
+        ctx = ", ".join(f"{k}={v}" for k, v in self.context.items())
+        if ctx:
+            head += f" ({ctx})"
+        lines = [head]
+        for f in sorted(self.findings, key=lambda f: -f.severity):
+            lines.append("  " + f.format())
+        for n in self.notes if verbose else []:
+            lines.append(f"  note: {n}")
+        if self.suppressed:
+            lines.append(f"  suppressed rules: {', '.join(self.suppressed)}")
+        if not self.findings:
+            lines.append("  clean: no findings")
+        return "\n".join(lines)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "target": self.target, "context": self.context,
+            "clean": self.clean, "suppressed": self.suppressed,
+            "notes": self.notes,
+            "findings": [{
+                "rule": f.rule, "severity": f.severity.name, "op": f.op,
+                "shape": f.shape, "predicted_bytes": f.predicted_bytes,
+                "actual_bytes": f.actual_bytes, "message": f.message,
+            } for f in self.findings]}, indent=2)
+
+
+def summarize(reports: Sequence[Report]) -> Tuple[int, int]:
+    """(#reports with any finding, #ERROR findings) across a sweep."""
+    dirty = sum(1 for r in reports if r.findings)
+    errors = sum(len(r.errors) for r in reports)
+    return dirty, errors

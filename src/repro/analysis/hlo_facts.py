@@ -1,0 +1,99 @@
+"""Module-header facts of a partitioned HLO program.
+
+The rules need two facts the op-level parser (`launch.hlo_cost`) doesn't
+extract: the entry computation's parameter/result types and the
+input→output donation aliases.  Both live on the `HloModule` header line:
+
+  HloModule jit_f, entry_computation_layout={(s32[512]{0})->s32[512]{0}},
+      input_output_alias={ {}: (0, {}, may-alias) }, ...
+
+Types may be tuples whose member layouts contain parens/braces
+(`f32[8,16]{1,0:T(8,128)}`), so splitting is depth-tracked, not regex.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Set, Tuple
+
+from repro.launch.hlo_cost import _parse_shape, _shape_bytes
+
+_ALIAS_RE = re.compile(r"input_output_alias=\{(.*?)\}(?:,|\s|$)")
+_ALIAS_ENTRY_RE = re.compile(r"\{[\d,\s]*\}:\s*\((\d+)")
+_ENTRY_LAYOUT_RE = re.compile(r"entry_computation_layout=\{")
+
+
+def _split_top(s: str, sep: str = ",") -> List[str]:
+    """Split on `sep` at paren/brace/bracket depth 0."""
+    out, buf, depth = [], [], 0
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == sep and depth == 0:
+            out.append("".join(buf).strip())
+            buf = []
+        else:
+            buf.append(ch)
+    tail = "".join(buf).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def _balanced(text: str, start: int, open_ch: str = "{",
+              close_ch: str = "}") -> str:
+    """The balanced `{...}` region starting at text[start] (inclusive)."""
+    assert text[start] == open_ch, text[start:start + 20]
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == open_ch:
+            depth += 1
+        elif text[i] == close_ch:
+            depth -= 1
+            if depth == 0:
+                return text[start:i + 1]
+    raise ValueError("unbalanced header region")
+
+
+def entry_layout(text: str) -> Tuple[List[str], List[str]]:
+    """(param type strings, output type strings) of the entry computation.
+
+    A tuple-typed result is flattened to its members; a single result is a
+    one-element list.  Empty lists when the header carries no layout.
+    """
+    m = _ENTRY_LAYOUT_RE.search(text)
+    if not m:
+        return [], []
+    region = _balanced(text, m.end() - 1)[1:-1]          # strip outer {}
+    if "->" not in region:
+        return [], []
+    params_s, out_s = region.split("->", 1)
+    params_s = params_s.strip()
+    if params_s.startswith("(") and params_s.endswith(")"):
+        params_s = params_s[1:-1]
+    params = [p for p in _split_top(params_s) if p]
+    out_s = out_s.strip()
+    if out_s.startswith("(") and out_s.endswith(")"):
+        outs = [o for o in _split_top(out_s[1:-1]) if o]
+    else:
+        outs = [out_s] if out_s else []
+    return params, outs
+
+
+def aliased_param_indices(text: str) -> Set[int]:
+    """Parameter indices donated to an output (input_output_alias header)."""
+    m = re.search(r"input_output_alias=\{", text)
+    if not m:
+        return set()
+    region = _balanced(text, m.end() - 1)
+    return {int(i) for i in _ALIAS_ENTRY_RE.findall(region)}
+
+
+def type_key(type_str: str) -> Tuple[Tuple[str, Tuple[int, ...]], ...]:
+    """Layout-insensitive identity of a type: ((dtype, dims), ...)."""
+    return tuple((d, tuple(dims)) for d, dims in _parse_shape(type_str))
+
+
+def type_bytes(type_str: str) -> float:
+    return _shape_bytes(type_str)

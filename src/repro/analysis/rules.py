@@ -1,0 +1,158 @@
+"""The homecheck rule set: R1-R4 over a lowered workload's artifacts.
+
+Each rule is a pure function from extracted facts (the per-op collective
+census of `launch.hlo_cost.analyze`, the module-header facts of
+`hlo_facts`, the pallas footprints of `vmem`) to `Finding`s appended to a
+`Report`.  Rules never trace or compile anything themselves — the
+orchestrator (`analysis.homecheck`) produces the artifacts once and feeds
+every rule from them.
+
+  R1 surprise-collective — diff the HLO collective census (kind, count,
+      per-device wire bytes; `while`-body collectives already scaled by
+      trip count) against `engine.collective_census`'s analytic budget.
+      A collective the byte model never budgeted is exactly the class of
+      silent cost the paper's discipline exists to exclude.
+  R2 home-leak — a collective whose device groups vary over a mesh axis
+      the locale never declared means GSPMD reshards/reduces homed values
+      across an unrelated axis (the PR 3 miscompile class: a padding
+      concatenate partitioned over a >1 'model' axis arrived *summed*).
+  R3 vmem-budget — per-pallas_call block+scratch footprint vs the per-core
+      VMEM ceiling (`repro.kernels.VMEM_BYTES_PER_CORE`).
+  R4 donation-audit — a large entry parameter that is not donation-aliased
+      but whose exact logical type reappears as an output is a buffer XLA
+      must copy every step ('free as soon as finished', paper step 5).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Report, Severity
+from repro.analysis.hlo_facts import (aliased_param_indices, entry_layout,
+                                      type_bytes, type_key)
+from repro.analysis.vmem import PallasFootprint
+
+# R1 byte tolerance: the schedule is exact on CPU SPMD lowerings; allow a
+# whisker for layout padding on other backends.
+R1_REL_TOL = 0.02
+R1_ABS_TOL = 4096.0
+
+R4_MIN_BYTES = float(1 << 20)           # audit buffers >= 1 MiB
+
+
+def r1_surprise_collective(report: Report, coll_ops: List[Dict],
+                           predicted: Dict[str, Dict]) -> None:
+    """Diff the HLO collective census against the analytic budget."""
+    actual: Dict[str, Dict] = {}
+    for rec in coll_ops:
+        e = actual.setdefault(rec["kind"], {"count": 0.0, "wire": 0.0})
+        e["count"] += rec["mult"]
+        e["wire"] += rec["wire_bytes"] * rec["mult"]
+    for kind in sorted(set(actual) | set(predicted)):
+        a = actual.get(kind, {"count": 0.0, "wire": 0.0})
+        p = predicted.get(kind, {"count": 0, "wire_bytes": 0.0})
+        ca, cp = a["count"], p["count"]
+        wa, wp = a["wire"], p["wire_bytes"]
+        if ca > cp:
+            report.add(Finding(
+                "R1", Severity.ERROR, kind,
+                predicted_bytes=wp, actual_bytes=wa,
+                message=f"unbudgeted collective: HLO has {ca:g} "
+                        f"{kind}(s), exchange_schedule budgets {cp:g}"))
+        elif ca < cp:
+            report.add(Finding(
+                "R1", Severity.WARN, kind,
+                predicted_bytes=wp, actual_bytes=wa,
+                message=f"budgeted {kind} missing from HLO "
+                        f"({ca:g} < {cp:g}) — compiler elided or fused; "
+                        f"the byte model overestimates this case"))
+        elif abs(wa - wp) > max(R1_ABS_TOL, R1_REL_TOL * max(wa, wp)):
+            report.add(Finding(
+                "R1", Severity.WARN, kind,
+                predicted_bytes=wp, actual_bytes=wa,
+                message=f"{kind} count matches ({ca:g}) but per-device "
+                        f"wire bytes diverge beyond tolerance"))
+
+
+def _varied_axes(groups: List[List[int]], axis_names: Sequence[str],
+                 axis_sizes: Sequence[int]) -> Set[str]:
+    """Mesh axes over which the collective's device groups vary.
+
+    Device ids are logical partition ids == positions in the mesh's
+    row-major device flattening, so coords come from unravel_index over the
+    mesh shape.  Empty `groups` (HLO `replica_groups={}`) means every
+    device participates: all >1-size axes vary.
+    """
+    shape = tuple(axis_sizes)
+    if not groups:
+        return {a for a, s in zip(axis_names, shape) if s > 1}
+    nd = int(np.prod(shape))
+    varied: Set[str] = set()
+    for g in groups:
+        if len(g) < 2:
+            continue
+        coords = [np.unravel_index(p, shape) for p in g if p < nd]
+        for k, name in enumerate(axis_names):
+            if len({c[k] for c in coords}) > 1:
+                varied.add(name)
+    return varied
+
+
+def r2_home_leak(report: Report, coll_ops: List[Dict],
+                 axis_names: Sequence[str], axis_sizes: Sequence[int],
+                 allowed_axes: Sequence[str]) -> None:
+    """Flag collectives whose groups span an undeclared mesh axis."""
+    allowed = set(allowed_axes)
+    for rec in coll_ops:
+        varied = _varied_axes(rec["groups"], axis_names, axis_sizes)
+        leak = varied - allowed
+        if leak:
+            report.add(Finding(
+                "R2", Severity.ERROR, rec["kind"],
+                actual_bytes=rec["wire_bytes"] * rec["mult"],
+                message=f"device groups vary over undeclared mesh "
+                        f"axis(es) {sorted(leak)} (declared: "
+                        f"{sorted(allowed)}) — GSPMD is moving homed "
+                        f"values across an axis the locale never uses; "
+                        f"groups={rec['groups'] or 'all devices'}"))
+
+
+def r3_vmem_budget(report: Report, footprints: List[PallasFootprint],
+                   ceiling_bytes: int) -> None:
+    """Flag pallas_calls whose resident footprint exceeds the ceiling."""
+    for fp in footprints:
+        if fp.total_bytes > ceiling_bytes:
+            report.add(Finding(
+                "R3", Severity.ERROR, "pallas_call",
+                shape=", ".join(f"{s}:{d}" for s, d in fp.blocks),
+                predicted_bytes=float(ceiling_bytes),
+                actual_bytes=float(fp.total_bytes),
+                message=f"grid={fp.grid} blocks+scratch keep "
+                        f"{fp.total_bytes:,} bytes resident per core "
+                        f"(blocks {fp.block_bytes:,} + scratch "
+                        f"{fp.scratch_bytes:,}) > VMEM ceiling "
+                        f"{ceiling_bytes:,}"))
+
+
+def r4_donation_audit(report: Report, hlo_text: str,
+                      min_bytes: float = R4_MIN_BYTES,
+                      donated_ok: Optional[Sequence[int]] = None) -> None:
+    """Flag large non-donated entry params whose type reappears as output."""
+    params, outs = entry_layout(hlo_text)
+    if not params:
+        return
+    aliased = aliased_param_indices(hlo_text)
+    out_keys = {type_key(o) for o in outs}
+    for i, p in enumerate(params):
+        if i in aliased or (donated_ok and i in donated_ok):
+            continue
+        b = type_bytes(p)
+        if b >= min_bytes and type_key(p) in out_keys:
+            report.add(Finding(
+                "R4", Severity.WARN, "parameter", shape=p,
+                actual_bytes=b,
+                message=f"entry param {i} ({b:,.0f}B) is returned "
+                        f"same-shaped but not donation-aliased — XLA "
+                        f"copies it every step; donate it "
+                        f"(Locale.jit(fn, donate=(...,)))"))

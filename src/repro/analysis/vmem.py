@@ -1,0 +1,103 @@
+"""Static VMEM footprints of every `pallas_call` in a traced program.
+
+Rule R3's fact extractor: walks a (closed) jaxpr recursively — through
+pjit, scan/while bodies, cond branches, shard_map, custom-derivative
+wrappers — and for each `pallas_call` equation computes the bytes the call
+keeps resident per grid step: one block per operand/result BlockSpec plus
+every scratch operand, straight from the grid mapping.  This is exactly
+what the kernel allocates on-chip, so comparing it to the per-core VMEM
+ceiling catches oversized chunks at lowering time instead of as a runtime
+crash (or a silent spill) at production sizes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PallasFootprint:
+    name: str                    # kernel name (debug info) or "pallas_call"
+    grid: tuple
+    block_bytes: int             # sum over in/out BlockSpec blocks
+    scratch_bytes: int           # sum over scratch shapes (VMEM/SMEM)
+    blocks: tuple                # ((shape, dtype_str), ...) for the message
+
+    @property
+    def total_bytes(self) -> int:
+        return self.block_bytes + self.scratch_bytes
+
+
+def _block_numel(block_shape) -> int:
+    n = 1
+    for d in block_shape:
+        if d is None:            # squeezed dim
+            continue
+        n *= int(getattr(d, "block_size", d))   # plain int or Blocked dim
+    return n
+
+
+def _aval_bytes(aval) -> int:
+    shape = tuple(getattr(aval, "shape", ()) or ())
+    dtype = np.dtype(getattr(aval, "dtype", np.float32))
+    return int(np.prod(shape, dtype=np.int64)) * dtype.itemsize if shape \
+        else dtype.itemsize
+
+
+def pallas_footprints(jaxpr_like: Any) -> List[PallasFootprint]:
+    """All pallas_call footprints reachable from a jaxpr or ClosedJaxpr."""
+    out: List[PallasFootprint] = []
+    seen = set()
+
+    def sub_jaxprs(value):
+        if hasattr(value, "eqns"):                   # Jaxpr
+            yield value
+        elif hasattr(value, "jaxpr") and hasattr(value.jaxpr, "eqns"):
+            yield value.jaxpr                        # ClosedJaxpr
+        elif isinstance(value, (list, tuple)):
+            for v in value:
+                yield from sub_jaxprs(v)
+
+    def visit(jaxpr):
+        if id(jaxpr) in seen:
+            return
+        seen.add(id(jaxpr))
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                out.append(_footprint(eqn))
+            for v in eqn.params.values():
+                for sub in sub_jaxprs(v):
+                    visit(sub)
+
+    for j in sub_jaxprs(jaxpr_like):
+        visit(j)
+    return out
+
+
+def _footprint(eqn) -> PallasFootprint:
+    gm = eqn.params["grid_mapping"]
+    blocks = []
+    block_bytes = 0
+    for bm in gm.block_mappings:
+        numel = _block_numel(bm.block_shape)
+        dtype = np.dtype(bm.array_shape_dtype.dtype)
+        block_bytes += numel * dtype.itemsize
+        blocks.append((tuple(d if d is None else int(getattr(d, "block_size",
+                                                             d))
+                             for d in bm.block_shape), str(dtype)))
+    scratch_bytes = 0
+    n_scratch = getattr(gm, "num_scratch_operands", 0)
+    if n_scratch:
+        kernel_jaxpr = eqn.params.get("jaxpr")
+        if kernel_jaxpr is not None:
+            for var in kernel_jaxpr.invars[-n_scratch:]:
+                scratch_bytes += _aval_bytes(var.aval)
+    name = getattr(getattr(eqn.params.get("debug"), "func_name", None),
+                   "__str__", lambda: "")() or \
+        str(eqn.params.get("name", "")) or "pallas_call"
+    return PallasFootprint(name=name, grid=tuple(gm.grid),
+                           block_bytes=block_bytes,
+                           scratch_bytes=scratch_bytes,
+                           blocks=tuple(blocks))

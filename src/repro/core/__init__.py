@@ -17,59 +17,29 @@ Building blocks (still first-class):
 
 The pre-`Locale` free functions (`to_layout`, `constrain`, `logical_view`,
 `localise`, `place`) and per-workload factories (`make_sort_fn`,
-`make_engine_fn`, `make_microbench_fn`) remain importable from here as thin
-deprecation shims only.
+`make_engine_fn`, `make_microbench_fn`) lived here as deprecation shims
+for two PRs and are now gone: use `Locale`/`Homed`, or import the
+building block from its own module (`repro.core.homing`,
+`repro.core.localisation`, `repro.core.sort`, `repro.core.engine`,
+`repro.core.microbench`) when you really want the mechanics.  Workload
+discovery (`repro.analysis` homecheck, `Locale.workload`) sees only the
+`register_workload` registry.
 """
-import warnings as _warnings
-
-from repro.core import engine as _engine
-from repro.core import homing as _homing
-from repro.core import localisation as _localisation
-from repro.core import microbench as _microbench
-from repro.core import sort as _sort
-from repro.core.api import Homed, Locale, register_workload
+from repro.core.api import (Homed, Locale, register_workload,
+                            workload_names)
 from repro.core.homing import Homing, check_divisible
 from repro.core.localisation import LocalisationPolicy, chunk_bounds
 from repro.core.sort import (BACKENDS, check_nan_free, distributed_merge_sort,
                              merge_sorted, pad_to_multiple, pad_value)
-from repro.core.engine import (LOCAL_PHASES, exchange_schedule,
-                               shard_map_sort)
+from repro.core.engine import (LOCAL_PHASES, collective_census,
+                               exchange_schedule, shard_map_sort)
 from repro.core.microbench import repetitive_copy
 
-
-def _deprecated(name: str, fn, repl: str):
-    def shim(*args, **kw):
-        _warnings.warn(
-            f"repro.core.{name} is deprecated; use {repl} (repro.core.api)",
-            DeprecationWarning, stacklevel=2)
-        return fn(*args, **kw)
-    shim.__name__ = name
-    shim.__qualname__ = name
-    shim.__doc__ = f"Deprecated shim for {repl}.\n\n{fn.__doc__ or ''}"
-    return shim
-
-
-to_layout = _deprecated("to_layout", _homing.to_layout, "Locale.put")
-constrain = _deprecated("constrain", _homing.constrain, "Locale.pin")
-logical_view = _deprecated("logical_view", _homing.logical_view,
-                           "Homed.logical")
-localise = _deprecated("localise", _localisation.localise, "Locale.localise")
-place = _deprecated("place", _localisation.place, "Locale.pin")
-make_sort_fn = _deprecated("make_sort_fn", _sort.make_sort_fn,
-                           'Locale.workload("sort", backend=...)')
-make_engine_fn = _deprecated("make_engine_fn", _engine.make_engine_fn,
-                             'Locale.workload("sort", backend="shard_map")')
-make_microbench_fn = _deprecated("make_microbench_fn",
-                                 _microbench.make_microbench_fn,
-                                 'Locale.workload("microbench", reps=...)')
-
-__all__ = ["Locale", "Homed", "register_workload",
+__all__ = ["Locale", "Homed", "register_workload", "workload_names",
            "Homing", "check_divisible",
            "LocalisationPolicy", "chunk_bounds",
            "BACKENDS", "check_nan_free", "distributed_merge_sort",
            "merge_sorted", "pad_to_multiple", "pad_value",
-           "LOCAL_PHASES", "exchange_schedule", "shard_map_sort",
-           "repetitive_copy",
-           # deprecated shims
-           "to_layout", "constrain", "logical_view", "localise", "place",
-           "make_sort_fn", "make_engine_fn", "make_microbench_fn"]
+           "LOCAL_PHASES", "collective_census", "exchange_schedule",
+           "shard_map_sort",
+           "repetitive_copy"]

@@ -113,6 +113,11 @@ def register_workload(name: str):
     return deco
 
 
+def workload_names() -> Tuple[str, ...]:
+    """The registered workload names (homecheck's discovery surface)."""
+    return tuple(sorted(_WORKLOADS))
+
+
 @dataclass(frozen=True)
 class Locale:
     """Where data lives: ``(mesh, axis, policy)`` as one first-class value.
@@ -293,6 +298,19 @@ class Locale:
             raise ValueError(f"unknown workload {name!r}; registered: "
                              f"{sorted(_WORKLOADS)}") from None
         return builder(self, **kw)
+
+    def check(self, workload: str = "sort", *, suppress=(), **kw):
+        """Statically verify a workload's lowering against this locale.
+
+        The homecheck hook: lowers ``self.workload(workload, ...)`` for a
+        representative input and runs rules R1-R4 (surprise collectives,
+        home leaks, VMEM budget, donation audit) over the partitioned HLO
+        and jaxpr without executing anything.  Returns an
+        `analysis.Report`; ``report.clean`` is the contract.  `suppress`
+        drops findings by rule id (e.g. ``suppress=("R4",)``).
+        """
+        from repro.analysis import check_workload
+        return check_workload(self, workload, suppress=suppress, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -490,6 +490,38 @@ def exchange_schedule(n: int, sizes: Sequence[int],
     return out
 
 
+#: exchange_schedule op name -> HLO collective opcode
+SCHEDULE_TO_HLO = {"all_to_all": "all-to-all", "all_gather": "all-gather",
+                   "ppermute": "collective-permute"}
+
+
+def collective_census(n: int, sizes: Sequence[int],
+                      policy: LocalisationPolicy,
+                      num_workers: Optional[int] = None,
+                      itemsize: int = 4,
+                      local_phase: Optional[str] = None) -> Dict[str, Dict]:
+    """The analytic collective budget, keyed by HLO opcode.
+
+    Folds `exchange_schedule`'s per-level records into per-device totals:
+    ``{hlo_kind: {"count": executions, "wire_bytes": bytes sent per
+    device}}``.  Schedule bytes are summed across devices; the per-device
+    wire share (total / m) is exactly what the SPMD module's collectives
+    move, so rule R1 can diff this dict against the lowered HLO's census
+    with zero tolerance on counts and near-zero on bytes.
+    """
+    m = math.prod(tuple(sizes))
+    out: Dict[str, Dict] = {}
+    for r in exchange_schedule(n, sizes, policy, num_workers=num_workers,
+                               itemsize=itemsize, local_phase=local_phase):
+        kind = SCHEDULE_TO_HLO.get(r["op"])
+        if kind is None:
+            continue                       # local compute record
+        e = out.setdefault(kind, {"count": 0, "wire_bytes": 0.0})
+        e["count"] += 1
+        e["wire_bytes"] += (r["inter_pod_bytes"] + r["intra_pod_bytes"]) / m
+    return out
+
+
 def make_engine_fn(mesh: Optional[Mesh], policy: LocalisationPolicy,
                    num_workers: Optional[int] = None,
                    local_sort: LocalSort = "bitonic",

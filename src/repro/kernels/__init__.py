@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernels for the VMEM-resident local phase.
+
+# Per-core VMEM capacity the kernels budget against (the ~16 MiB scratch
+# space of a TPU core; CPU interpret mode has no hard ceiling but the
+# production contract is sized to this).  `local_sort` documents the chunk
+# bound this implies; `repro.analysis` rule R3 enforces it statically for
+# every `pallas_call` in a lowered workload.
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024

@@ -36,9 +36,17 @@ COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
                "all-to-all": 1.0, "collective-permute": 1.0}
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|\w+\[[\d,]*\]\S*)\s*([\w\-]+)\(")
-_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*(\([^)]*\)|\w+\[[\d,]*\]\S*)")
+# Shapes may carry dynamic-dim markers (`s32[<=8]`) and layout suffixes whose
+# tiling contains parens (`f32[8,16]{1,0:T(8,128)}`); tuple types may nest
+# both (`(f32[8,16]{1,0:T(8,128)}, s32[8])`). The type pattern therefore
+# allows one level of paren nesting and arbitrary (non-`]`) dim text.
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,<=]*)\]")
+_TYPE_PAT = r"\((?:[^()]|\([^()]*\))*\)|\w+\[[^\]]*\]\S*"
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(" + _TYPE_PAT + r")\s*([\w\-]+)\(")
+_PARAM_RE = re.compile(
+    r"%?([\w.\-]+):\s*(\((?:[^()]|\([^()]*\))*\)"
+    r"|\w+\[[^\]]*\](?:\{[^{}]*\})?)")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 _CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
@@ -47,11 +55,97 @@ _COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
 _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
+_RG_BRACE_RE = re.compile(r"replica_groups=\{(\{[^{}]*\}(?:,\{[^{}]*\})*)\}")
+_RG_IOTA_RE = re.compile(
+    r"replica_groups=\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_STP_RE = re.compile(r"source_target_pairs=\{(\{[^{}]*\}(?:,\{[^{}]*\})*)\}")
+
+
+def _brace_groups(body: str) -> List[List[int]]:
+    return [[int(x) for x in g.split(",") if x.strip()]
+            for g in re.findall(r"\{([^{}]*)\}", body)]
+
+
+def _iota_groups(reshape: List[int], iota: List[int],
+                 perm: Optional[List[int]]) -> List[List[int]]:
+    """Expand `[G,S]<=[d0,..]T(p..)` iota replica groups to explicit ids.
+
+    Values 0..prod(iota)-1 are laid out row-major in `iota` dims, transposed
+    by `perm`, then reshaped row-major to `reshape`; each trailing-dim row is
+    one group.
+    """
+    perm = perm if perm is not None else list(range(len(iota)))
+    strides = [1] * len(iota)
+    for i in range(len(iota) - 2, -1, -1):
+        strides[i] = strides[i + 1] * iota[i + 1]
+    t_shape = [iota[p] for p in perm]
+    vals: List[int] = []
+
+    def rec(coord: List[int]) -> None:
+        if len(coord) == len(t_shape):
+            orig = [0] * len(iota)
+            for j, p in enumerate(perm):
+                orig[p] = coord[j]
+            vals.append(sum(c * s for c, s in zip(orig, strides)))
+            return
+        for c in range(t_shape[len(coord)]):
+            rec(coord + [c])
+
+    rec([])
+    gsize = reshape[-1]
+    return [vals[i:i + gsize] for i in range(0, len(vals), gsize)]
+
+
+def collective_groups(line: str) -> List[List[int]]:
+    """Device groups of a collective op line, [] when unspecified (= all).
+
+    collective-permute yields its (src, tgt) pairs; others yield the
+    replica groups from either the explicit brace form or the iota form.
+    """
+    m = _STP_RE.search(line)
+    if m:
+        return _brace_groups(m.group(1))
+    m = _RG_BRACE_RE.search(line)
+    if m:
+        return _brace_groups(m.group(1))
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        reshape = [int(x) for x in m.group(1).split(",")]
+        iota = [int(x) for x in m.group(2).split(",")]
+        perm = ([int(x) for x in m.group(3).split(",")]
+                if m.group(3) else None)
+        return _iota_groups(reshape, iota, perm)
+    return []
+
+
+def _wire_bytes(kind: str, b: float, group_size: int) -> float:
+    """Per-device wire bytes for one execution of a collective.
+
+    `b` is the payload (result) bytes. Verified against exchange_schedule:
+    ppermute sends its whole buffer; all-gather moves (g-1)/g of the gathered
+    result; all-to-all keeps 1/g resident; reduce-scatter reads g partials.
+    """
+    if kind == "collective-permute":
+        return b
+    g = group_size
+    if g and g > 1:
+        if kind == "all-gather":
+            return b * (g - 1) / g
+        if kind == "reduce-scatter":
+            return b * (g - 1)
+        if kind == "all-reduce":
+            return 2.0 * b * (g - 1) / g
+        return b * (g - 1) / g  # all-to-all
+    return b * COLL_FACTOR[kind]
 
 
 def _parse_shape(s: str) -> List[Tuple[str, List[int]]]:
-    """'(f32[2,3], bf16[4])' or 'f32[2,3]{1,0}' -> list of (dtype, dims)."""
-    return [(d, [int(x) for x in dims.split(",") if x])
+    """'(f32[2,3], bf16[4])' or 'f32[2,3]{1,0}' -> list of (dtype, dims).
+
+    Dynamic dims (`s32[<=8]`) are treated at their bound.
+    """
+    return [(d, [int(x.replace("<=", "")) for x in dims.split(",")
+                 if x.replace("<=", "")])
             for d, dims in _SHAPE_RE.findall(s)]
 
 
@@ -244,7 +338,8 @@ def analyze(text: str) -> dict:
     entry = comps["__entry__"]
     totals = {"flops": 0.0, "bytes": 0.0,
               "coll": defaultdict(float), "coll_counts": defaultdict(float),
-              "while_trips": [], "top_bytes": [], "top_flops": []}
+              "while_trips": [], "top_bytes": [], "top_flops": [],
+              "coll_ops": []}
 
     def walk(comp: Computation, mult: float, count_bytes: bool, depth: int = 0):
         if depth > 50:
@@ -259,14 +354,26 @@ def analyze(text: str) -> dict:
                 shape = op.result
                 shps = _parse_shape(shape)
                 if shape.startswith("(") and len(shps) > 1:
-                    # async start returns (operand, result, ...): use result
-                    b = sum((lambda n: n)(  # bytes of the largest member
-                        _shape_bytes(f"{d}[{','.join(map(str, dims))}]"))
-                        for d, dims in shps[1:2])
+                    if op.opcode.endswith("-start"):
+                        # async start returns (operand, result, ...)
+                        b = sum(
+                            _shape_bytes(f"{d}[{','.join(map(str, dims))}]")
+                            for d, dims in shps[1:2])
+                    else:
+                        # multi-operand collective (decomposed all-to-all):
+                        # the payload is ALL tuple members together
+                        b = _shape_bytes(shape)
                 else:
                     b = _shape_bytes(shape)
                 totals["coll"][kind] += mult * b * COLL_FACTOR[kind]
                 totals["coll_counts"][kind] += mult
+                groups = collective_groups(op.line)
+                gsize = len(groups[0]) if groups else 0
+                totals["coll_ops"].append({
+                    "kind": kind, "bytes": b,
+                    "wire_bytes": _wire_bytes(kind, b, gsize),
+                    "mult": mult, "groups": groups, "group_size": gsize,
+                    "line": op.line.strip()[:400]})
             if count_bytes:
                 b = mult * _op_bytes(op, comp, comps)
                 totals["bytes"] += b
@@ -305,4 +412,5 @@ def analyze(text: str) -> dict:
             "collective": dict(totals["coll"]),
             "collective_total": sum(totals["coll"].values()),
             "collective_counts": dict(totals["coll_counts"]),
+            "collective_ops": totals["coll_ops"],
             "while_trips": totals["while_trips"]}

@@ -1,0 +1,139 @@
+"""homecheck CLI: statically verify workloads against their home contract.
+
+    PYTHONPATH=src python -m repro.launch.homecheck \
+        --workload sort|engine|microbench|serve|all \
+        [--pods PxD[xM]] [--policy flat|hash|nonloc|nonloc-hash|hier|hier-hash] \
+        [--backend shard_map|constraint] [--logn N] [--num-workers W] \
+        [--suppress R4 ...] [--json] [--verbose]
+
+Lowers the selected workload(s) over the requested (emulated) mesh and
+runs rules R1-R4 (see `repro.analysis`) on the partitioned HLO + jaxpr —
+nothing executes.  ``--pods`` sets ``XLA_FLAGS`` itself, so the command is
+self-sufficient on a laptop.  Exit status 1 on any ERROR-severity finding
+(and 2 on a driver failure), so `runtime.ft.Supervisor`/CI can supervise
+it uniformly.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def parse_pods(spec: str):
+    """``PxD`` or ``PxDxM`` -> (n_pods, n_data, n_model)."""
+    parts = [int(p) for p in spec.lower().split("x")]
+    if len(parts) == 2:
+        parts.append(1)
+    if len(parts) != 3 or any(p < 1 for p in parts):
+        raise argparse.ArgumentTypeError(
+            f"--pods wants PxD or PxDxM with positive ints, got {spec!r}")
+    return tuple(parts)
+
+
+POLICIES = ("auto", "flat", "hash", "nonloc", "nonloc-hash",
+            "hier", "hier-hash", "all")
+
+
+def make_policy(name: str, n_pods: int):
+    """Resolve a --policy name to a LocalisationPolicy (lazy jax import)."""
+    from repro.core.homing import Homing
+    from repro.core.localisation import LocalisationPolicy
+    if name == "auto":
+        name = "hier" if n_pods > 1 else "flat"
+    return {
+        "flat": LocalisationPolicy(),
+        "hash": LocalisationPolicy(homing=Homing.HASH_INTERLEAVED),
+        "nonloc": LocalisationPolicy(localised=False),
+        "nonloc-hash": LocalisationPolicy(
+            localised=False, homing=Homing.HASH_INTERLEAVED),
+        "hier": LocalisationPolicy.hierarchical(),
+        "hier-hash": LocalisationPolicy.hierarchical(inner="hash"),
+    }[name]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="static locality analyzer (homecheck)")
+    ap.add_argument("--workload", default="sort",
+                    choices=("sort", "engine", "microbench", "serve", "all"))
+    ap.add_argument("--pods", type=parse_pods, default=None, metavar="PxD[xM]",
+                    help="emulated (pod, data, model) mesh; sets XLA_FLAGS")
+    ap.add_argument("--policy", choices=POLICIES, default="auto",
+                    help="localisation policy (auto = hier on a pod mesh; "
+                         "all = every policy the mesh supports)")
+    ap.add_argument("--backend", choices=("shard_map", "constraint"),
+                    default="shard_map",
+                    help="sort backend (R1 needs the shard_map byte model)")
+    ap.add_argument("--logn", type=int, default=12,
+                    help="~log2 of the representative input length")
+    ap.add_argument("--num-workers", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=4, help="microbench passes")
+    ap.add_argument("--arch", default="qwen3-0.6b", help="serve config")
+    ap.add_argument("--suppress", nargs="*", default=(), metavar="RULE",
+                    help="rule ids to drop from the report (e.g. R4)")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    # the mesh is emulated out of host devices: the flag must be set before
+    # jax (transitively, any repro module) first touches the backend.
+    if args.pods is not None:
+        n_dev = args.pods[0] * args.pods[1] * args.pods[2]
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n_dev}").strip()
+
+    import jax
+
+    from repro.analysis import check_decode, check_workload, summarize
+    from repro.core.api import Locale
+    from repro.launch.mesh import make_host_mesh
+
+    if args.pods is not None:
+        p, d, m = args.pods
+        mesh = make_host_mesh(n_pods=p, n_data=d, n_model=m)
+        sort_axis = ("pod", "data") if p > 1 else "data"
+        n_pods = p
+    else:
+        n_dev = len(jax.devices())
+        mesh = make_host_mesh(n_data=n_dev, n_model=1) if n_dev > 1 else None
+        sort_axis = "data"
+        n_pods = 1
+    def pol_names(workload: str):
+        """--policy all: every policy the mesh supports for this workload."""
+        if args.policy != "all":
+            return (args.policy,)
+        if workload == "microbench":            # Fig-1 bench: loc vs nonloc
+            return ("flat", "nonloc")
+        return (("hier", "hier-hash") if n_pods > 1
+                else ("flat", "hash", "nonloc", "nonloc-hash"))
+
+    names = (("sort", "microbench", "serve") if args.workload == "all"
+             else (args.workload,))
+    reports = []
+    for name in names:
+        if name == "serve":
+            reports.append(check_decode(mesh, cfg_name=args.arch,
+                                        suppress=args.suppress))
+            continue
+        for pname in pol_names(name):
+            locale = Locale(mesh=mesh, axis=sort_axis,
+                            policy=make_policy(pname, n_pods))
+            reports.append(check_workload(
+                locale, name, backend=args.backend,
+                num_workers=args.num_workers, logn=args.logn,
+                reps=args.reps, suppress=args.suppress))
+
+    for rep in reports:
+        print(rep.to_json() if args.as_json
+              else rep.format(verbose=args.verbose))
+    dirty, errors = summarize(reports)
+    total = sum(len(r.findings) for r in reports)
+    print(f"homecheck: {len(reports)} target(s), {total} finding(s), "
+          f"{errors} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

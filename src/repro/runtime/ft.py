@@ -25,7 +25,25 @@ class Supervisor:
     env: Optional[dict] = None
 
     def run(self) -> dict:
+        """Supervise to completion; always returns a structured record.
+
+        ``{"ok", "reason", "restarts", "hangs", "final_rc", "history",
+        "stdout"}`` where ``reason`` is one of:
+
+          completed            — a clean exit within the restart budget
+          max_restarts         — the relaunch budget ran out
+          hung_restart_budget  — the final attempt exited 0, but only
+                                 after `max_restarts` heartbeat-kill
+                                 restarts: a worker that repeatedly hung
+                                 and then limped to rc=0 is NOT a healthy
+                                 run, and used to be reported as success.
+
+        Crashes (non-zero exits without a heartbeat kill) consume the
+        restart budget but never poison a subsequent clean exit — the
+        kill -9 -> relaunch -> resume path is the designed recovery.
+        """
         restarts = 0
+        hangs = 0
         history = []
         while True:
             t0 = time.time()
@@ -34,6 +52,7 @@ class Supervisor:
                 self.cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
                 text=True, env={**os.environ, **(self.env or {})})
             lines = []
+            hung = False
             while True:
                 line = proc.stdout.readline()
                 if line:
@@ -42,16 +61,25 @@ class Supervisor:
                 elif proc.poll() is not None:
                     break
                 if time.time() - last_beat > self.heartbeat_timeout_s:
+                    hung = True
                     proc.kill()          # hung / straggling worker
                     break
             rc = proc.wait()
-            history.append({"rc": rc, "seconds": round(time.time() - t0, 1),
+            hangs += int(hung)
+            history.append({"rc": rc, "hung": hung,
+                            "seconds": round(time.time() - t0, 1),
                             "lines": len(lines)})
-            if rc == 0:
-                return {"ok": True, "restarts": restarts,
+
+            def result(ok: bool, reason: str) -> dict:
+                return {"ok": ok, "reason": reason, "restarts": restarts,
+                        "hangs": hangs, "final_rc": rc,
                         "history": history, "stdout": lines}
+
+            if rc == 0 and not hung:
+                if hangs >= self.max_restarts:
+                    return result(False, "hung_restart_budget")
+                return result(True, "completed")
             restarts += 1
             if restarts > self.max_restarts:
-                return {"ok": False, "restarts": restarts,
-                        "history": history, "stdout": lines}
+                return result(False, "max_restarts")
             # relaunch: trainer resumes from the latest atomic checkpoint

@@ -7,7 +7,6 @@ the slow tier runs the acceptance sweep on an 8-device host mesh:
 import os
 import subprocess
 import sys
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -232,76 +231,19 @@ def test_multi_axis_locale_make_and_workloads():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# deprecation shims: removed after two PRs of warnings
 # ---------------------------------------------------------------------------
-def test_free_function_shims_warn_and_delegate():
+def test_free_function_shims_are_gone():
+    """The pre-Locale free functions were deprecation shims for two PRs and
+    are now removed; the building blocks live only in their own modules."""
     import repro.core as core
-    x = jnp.arange(8, dtype=jnp.float32)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        assert core.localise(x, None) is x
-        assert core.place(x, None, LocalisationPolicy()) is x
-        np.testing.assert_array_equal(np.asarray(core.logical_view(x,
-                                      Homing.LOCAL_CHUNKED)), np.asarray(x))
-        fn = core.make_sort_fn(None, LocalisationPolicy(), num_workers=8)
-        np.testing.assert_array_equal(np.asarray(fn(jnp.array(x))),
-                                      np.sort(np.asarray(x)))
-    assert len(w) == 4
-    assert all(issubclass(r.category, DeprecationWarning) for r in w)
-    assert "Locale.localise" in str(w[0].message)
-
-
-def test_every_shim_warns_and_matches_api_bit_identical():
-    """Each deprecated free function must (a) warn and (b) return results
-    bit-identical to the `Locale`/`Homed` path, so the migration can't rot."""
-    import repro.core as core
-    mesh = _mesh1()
-    x = jnp.arange(16, dtype=jnp.int32)
-    xf = jnp.linspace(0.0, 1.0, 16)
-    pol = LocalisationPolicy()
-    loc = Locale(mesh=mesh, policy=pol)
-    hash_loc = Locale(mesh=mesh,
-                      policy=LocalisationPolicy(homing=Homing.HASH_INTERLEAVED))
-
-    def shim(name, *args, **kw):
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            out = getattr(core, name)(*args, **kw)
-        assert len(w) == 1 and issubclass(w[0].category, DeprecationWarning), \
-            (name, [str(r.message) for r in w])
-        return out
-
-    # to_layout == Locale.put(...).data, both homings
-    for l in (loc, hash_loc):
-        old = shim("to_layout", x, mesh, l.policy.homing)
-        np.testing.assert_array_equal(np.asarray(old),
-                                      np.asarray(l.put(x).data))
-    # logical_view == Homed.logical
-    h = hash_loc.put(x)
-    np.testing.assert_array_equal(
-        np.asarray(shim("logical_view", h.data, h.homing)),
-        np.asarray(h.logical()))
-    # constrain / place / localise == Locale.pin / Locale.localise (in jit)
-    for name, args, api in [
-            ("constrain", (xf, mesh, pol.homing), lambda v: loc.pin(v)),
-            ("place", (xf, mesh, pol), lambda v: loc.pin(v)),
-            ("localise", (xf, mesh), lambda v: loc.localise(v))]:
-        np.testing.assert_array_equal(np.asarray(shim(name, *args)),
-                                      np.asarray(jax.jit(api)(xf)))
-    # make_*_fn == Locale.workload(...)
-    expect = np.asarray(loc.workload("sort", num_workers=8)(jnp.array(x)))
-    np.testing.assert_array_equal(
-        np.asarray(shim("make_sort_fn", mesh, pol, num_workers=8)(
-            jnp.array(x))), expect)
-    expect = np.asarray(loc.workload("engine", num_workers=8,
-                                     local_sort=jnp.sort)(jnp.array(x)))
-    np.testing.assert_array_equal(
-        np.asarray(shim("make_engine_fn", mesh, pol, num_workers=8,
-                        local_sort=jnp.sort)(jnp.array(x))), expect)
-    expect = np.asarray(loc.workload("microbench", reps=3)(jnp.array(xf)))
-    np.testing.assert_array_equal(
-        np.asarray(shim("make_microbench_fn", mesh, pol, 3)(jnp.array(xf))),
-        expect)
+    for name in ("to_layout", "constrain", "logical_view", "localise",
+                 "place", "make_sort_fn", "make_engine_fn",
+                 "make_microbench_fn"):
+        assert not hasattr(core, name), name
+        assert name not in core.__all__, name
+    # workload discovery sees only the register_workload registry
+    assert set(core.workload_names()) >= {"sort", "engine", "microbench"}
 
 
 # ---------------------------------------------------------------------------

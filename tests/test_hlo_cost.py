@@ -79,6 +79,71 @@ print("COLL_OK", counts)
     assert "COLL_OK" in r.stdout, r.stdout + r.stderr
 
 
+def test_def_regex_tuple_and_layout_suffixed_shapes():
+    """Satellite: _DEF_RE must not skip tuple results whose layouts contain
+    parens (TPU tiling like T(8,128)) or dynamic-dim markers."""
+    from repro.launch.hlo_cost import _DEF_RE, _PARAM_RE, _parse_shape
+    cases = [
+        ("  %f = (f32[8,16]{1,0:T(8,128)}, s32[8]{0}) fusion(%a), kind=kLoop",
+         "f", "fusion"),
+        ("  ROOT %r = f32[8,16]{1,0:T(8,128)} add(%a, %b)", "r", "add"),
+        ("  %t = (f32[8,16], s32[8]) custom-call(%a)", "t", "custom-call"),
+        ("  %d = s32[<=8]{0} add(%a, %b)", "d", "add"),
+    ]
+    for line, name, opcode in cases:
+        m = _DEF_RE.match(line)
+        assert m and m.group(1) == name and m.group(3) == opcode, line
+    ps = _PARAM_RE.findall(
+        "%p0: f32[8,16]{1,0:T(8,128)}, %p1: (f32[4]{0:T(8)}, s32[4])")
+    assert ps == [("p0", "f32[8,16]{1,0:T(8,128)}"),
+                  ("p1", "(f32[4]{0:T(8)}, s32[4])")], ps
+    # dynamic dims parse at their bound; layout digits are not dims
+    assert _parse_shape("s32[<=8]{0}") == [("s32", [8])]
+    assert _parse_shape("(f32[2,3]{1,0:T(8,128)}, bf16[4])") == \
+        [("f32", [2, 3]), ("bf16", [4])]
+
+
+def test_collective_group_parsing_all_three_forms():
+    from repro.launch.hlo_cost import collective_groups
+    brace = collective_groups(
+        "%x = f32[8] all-gather(%a), replica_groups={{0,4},{1,5}}")
+    assert brace == [[0, 4], [1, 5]], brace
+    iota = collective_groups(
+        "%x = f32[8] all-reduce(%a), replica_groups=[2,4]<=[4,2]T(1,0)")
+    assert iota == [[0, 2, 4, 6], [1, 3, 5, 7]], iota
+    flat_iota = collective_groups(
+        "%x = f32[8] all-gather(%a), replica_groups=[1,8]<=[8]")
+    assert flat_iota == [[0, 1, 2, 3, 4, 5, 6, 7]], flat_iota
+    pairs = collective_groups(
+        "%x = f32[8] collective-permute(%a), source_target_pairs={{0,2},{2,0}}")
+    assert pairs == [[0, 2], [2, 0]], pairs
+    assert collective_groups("%x = f32[8] all-reduce(%a), replica_groups={}") \
+        == []
+
+
+def test_analyze_emits_per_op_collective_records():
+    """collective_ops carries kind/bytes/wire/groups for every collective."""
+    from repro.launch.hlo_cost import analyze
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  %ag = f32[64,64]{1,0} all-gather(%p0), replica_groups={{0,1},{2,3}}, dimensions={0}
+  ROOT %cp = f32[64,64]{1,0} collective-permute(%ag), source_target_pairs={{0,1},{1,0}}
+}
+"""
+    r = analyze(hlo)
+    ops = r["collective_ops"]
+    assert [o["kind"] for o in ops] == ["all-gather", "collective-permute"]
+    ag, cp = ops
+    assert ag["group_size"] == 2 and ag["groups"] == [[0, 1], [2, 3]]
+    assert ag["bytes"] == 64 * 64 * 4
+    assert ag["wire_bytes"] == 64 * 64 * 4 / 2          # (g-1)/g of result
+    assert cp["wire_bytes"] == 64 * 64 * 4              # full buffer
+    assert all(o["mult"] == 1 for o in ops)
+
+
 def test_parse_module_finds_entry_and_computations():
     t = _compile_text(lambda a, b: a @ b + 1.0,
                       jnp.zeros((16, 16)), jnp.zeros((16, 16)))

@@ -100,6 +100,62 @@ def test_supervisor_relaunches_after_crash(tmp_path):
     assert any("FINAL" in l for l in out["stdout"])
 
 
+def test_supervisor_structured_record_and_hung_restart_budget(tmp_path):
+    """`Supervisor.run` always returns a structured failure/success record,
+    and a worker that exits 0 only after exhausting `max_restarts` on
+    heartbeat kills is a *failure* (it used to be reported as success)."""
+    from repro.runtime.ft import Supervisor
+
+    # clean run: completed, no restarts, one history entry
+    out = Supervisor(cmd=[sys.executable, "-c", "print('ok')"]).run()
+    assert out["ok"] and out["reason"] == "completed"
+    assert out["restarts"] == 0 and out["hangs"] == 0
+    assert out["final_rc"] == 0 and len(out["history"]) == 1
+    assert out["history"][0] == {"rc": 0, "hung": False,
+                                 "seconds": out["history"][0]["seconds"],
+                                 "lines": 1}
+
+    # crash budget exhausted: max_restarts, final_rc is the crash code
+    out = Supervisor(cmd=[sys.executable, "-c", "import sys; sys.exit(3)"],
+                     max_restarts=2).run()
+    assert not out["ok"] and out["reason"] == "max_restarts"
+    assert out["final_rc"] == 3 and out["restarts"] == 3
+    assert [h["rc"] for h in out["history"]] == [3, 3, 3]
+
+    # crash once then finish cleanly: still a success (designed recovery)
+    flaky = (
+        "import os, sys\n"
+        "marker = sys.argv[1]\n"
+        "if not os.path.exists(marker):\n"
+        "    open(marker, 'w').write('x'); sys.exit(9)\n"
+        "print('recovered')\n")
+    out = Supervisor(cmd=[sys.executable, "-c", flaky,
+                          str(tmp_path / "crashed")], max_restarts=2).run()
+    assert out["ok"] and out["reason"] == "completed"
+    assert out["restarts"] == 1 and out["hangs"] == 0
+
+    # hang (heartbeat kill) twice, then exit 0: the rc==0 exit must NOT be
+    # reported as a healthy run once the restart budget went to hangs
+    hangy = (
+        "import os, sys, time\n"
+        "d = sys.argv[1]\n"
+        "n = len(os.listdir(d))\n"
+        "open(os.path.join(d, str(n)), 'w').write('x')\n"
+        "print('beat', flush=True)\n"
+        "if n < 2:\n"
+        "    os.close(1); os.close(2)\n"  # silent from here on: hung worker
+        "    time.sleep(30)\n"            # (stderr shares the pipe)
+        "print('DONE')\n")
+    d = tmp_path / "attempts"
+    d.mkdir()
+    out = Supervisor(cmd=[sys.executable, "-c", hangy, str(d)],
+                     max_restarts=2, heartbeat_timeout_s=1.0).run()
+    assert not out["ok"] and out["reason"] == "hung_restart_budget"
+    assert out["hangs"] == 2 and out["final_rc"] == 0
+    assert [h["hung"] for h in out["history"]] == [True, True, False]
+    assert any("DONE" in l for l in out["stdout"])
+
+
 @pytest.mark.slow
 def test_decode_server_homes_slots_on_multi_device_mesh():
     """Satellite regression: the server's slot-homing locale must carry the
