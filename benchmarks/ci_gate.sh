@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Pre-merge gate: fast tests + the full static analyzer sweep, one command.
+#
+#   benchmarks/ci_gate.sh [BENCH_DIR]
+#
+# Runs `pytest -m "not slow"` and `launch/homecheck.py --workload all
+# --rules all` over a flat and a hierarchical emulated mesh (the analyzer
+# subprocesses set their own XLA_FLAGS), then stamps the combined verdict
+# (`"ci_gate": "pass"|"fail"`) into every record of every BENCH_*.json in
+# BENCH_DIR (default: repo root) alongside the existing "homecheck" key —
+# `benchmarks/compare.py` fails a PR whose baseline was "pass" but whose
+# fresh run is not.  Exit status 0 iff everything passed.
+set -u
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+BENCH_DIR="${1:-.}"
+verdict=pass
+
+echo "== ci_gate: pytest -m 'not slow' =="
+python -m pytest -x -q -m "not slow" || verdict=fail
+
+echo "== ci_gate: homecheck --workload all --rules all (flat 1x8) =="
+python -m repro.launch.homecheck --workload all --pods 1x8 \
+    --policy all --rules all || verdict=fail
+
+echo "== ci_gate: homecheck --workload all --rules all (hier 2x2x2) =="
+python -m repro.launch.homecheck --workload all --pods 2x2x2 \
+    --policy all --rules all || verdict=fail
+
+python - "$verdict" "$BENCH_DIR" <<'EOF'
+import glob, json, os, sys
+verdict, bench_dir = sys.argv[1], sys.argv[2]
+for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+    with open(path) as f:
+        rows = json.load(f)
+    for r in rows:
+        r["ci_gate"] = verdict
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# stamped ci_gate={verdict} into {path} ({len(rows)} records)")
+EOF
+
+echo "== ci_gate: $verdict =="
+[ "$verdict" = pass ]

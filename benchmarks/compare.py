@@ -17,8 +17,11 @@ When both runs were produced with ``run.py --check``, the static verdicts
 are gated too: a case whose baseline record says ``"homecheck": "clean"``
 but whose new record says ``"findings:N"`` (or ``"failed"``) fails the
 compare regardless of wall-clock — a locality regression is a regression
-even when it happens to be fast.  Records without the field (old
-baselines, runs without ``--check``) are not gated.
+even when it happens to be fast.  The ``"ci_gate"`` verdict stamped by
+``benchmarks/ci_gate.sh`` (fast tests + the full R1-R8 analyzer sweep) is
+gated the same way: baseline ``"pass"`` -> new anything else fails.
+Records without a field (old baselines, runs without ``--check`` or the
+gate) are not gated.
 
 Serving throughput is gated the same way: ``BENCH_serve.json``'s timed
 ``serve_<policy>_<mesh>`` rows store *us per generated token*, so "NEW is
@@ -43,18 +46,23 @@ def load(path: str) -> Dict[str, float]:
     return {r["name"]: r["us"] for r in records if r.get("us") is not None}
 
 
-def load_checks(path: str) -> Dict[str, str]:
-    """name -> homecheck verdict for records stamped by `run.py --check`."""
+#: verdict fields gated by the compare: field -> the passing value
+VERDICT_KEYS = {"homecheck": "clean", "ci_gate": "pass"}
+
+
+def load_checks(path: str, key: str = "homecheck") -> Dict[str, str]:
+    """name -> verdict for records stamped with `key` (run.py --check
+    stamps "homecheck", benchmarks/ci_gate.sh stamps "ci_gate")."""
     with open(path) as f:
         records = json.load(f)
-    return {r["name"]: r["homecheck"] for r in records if "homecheck" in r}
+    return {r["name"]: r[key] for r in records if key in r}
 
 
-def check_regressions(base_chk: Dict[str, str],
-                      new_chk: Dict[str, str]) -> Dict[str, str]:
-    """Cases that were homecheck-clean in base but are not in new."""
+def check_regressions(base_chk: Dict[str, str], new_chk: Dict[str, str],
+                      ok: str = "clean") -> Dict[str, str]:
+    """Cases whose verdict was `ok` in base but is not in new."""
     return {n: new_chk[n] for n in sorted(base_chk.keys() & new_chk.keys())
-            if base_chk[n] == "clean" and new_chk[n] != "clean"}
+            if base_chk[n] == ok and new_chk[n] != ok}
 
 
 def compare(base: Dict[str, float], new: Dict[str, float]) -> List[Dict]:
@@ -89,14 +97,16 @@ def main(argv=None) -> int:
     for name in sorted(new.keys() - base.keys()):
         print(f"# only-in-new: {name}")
     rc = 0
-    dirty = check_regressions(load_checks(args.base), load_checks(args.new))
-    for name, verdict in dirty.items():
-        print(f"# homecheck-regression: {name}: clean -> {verdict}",
-              file=sys.stderr)
-    if dirty:
-        print(f"# FAIL: {len(dirty)} previously homecheck-clean case(s) "
-              f"gained findings", file=sys.stderr)
-        rc = 1
+    for key, ok in VERDICT_KEYS.items():
+        dirty = check_regressions(load_checks(args.base, key),
+                                  load_checks(args.new, key), ok=ok)
+        for name, verdict in dirty.items():
+            print(f"# {key}-regression: {name}: {ok} -> {verdict}",
+                  file=sys.stderr)
+        if dirty:
+            print(f"# FAIL: {len(dirty)} previously {key}-{ok} case(s) "
+                  f"regressed", file=sys.stderr)
+            rc = 1
     if not rows:
         print("# no common timed cases", file=sys.stderr)
         return rc or 2

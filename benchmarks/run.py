@@ -13,11 +13,17 @@ run in-process with their stdout captured so their CSV reaches
 ``--smoke`` runs every entry point at toy sizes on 2 placeholder devices —
 fast enough for the test suite, so the benchmark surface can't silently rot.
 
-``--check`` runs the homecheck static analyzer (rules R1-R4, see
+``--check`` runs the homecheck static analyzer (rules R1-R8, see
 `repro.analysis`) over each bench family *before* timing it and stamps the
 verdict (``"homecheck": "clean"`` / ``"findings:N"`` / ``"failed"``) into
 every record the family contributes to BENCH_*.json; ``compare.py`` then
 fails a PR whose previously clean case gained findings.
+``benchmarks/ci_gate.sh`` additionally stamps a ``"ci_gate"`` verdict
+(fast tests + the full analyzer sweep) gated the same way.
+
+``bench_roofline`` reads the committed dry-run artifacts under
+``results/dryrun`` — its rows are analytic (compile-only), so its
+``BENCH_roofline.json`` baseline is deterministic across machines.
 """
 from __future__ import annotations
 
@@ -79,9 +85,10 @@ SMOKE_ARGS = {
 
 # --check: homecheck CLI argv per bench family ("{D}" = device count).
 # Each entry lowers the family's workload/policy surface and runs rules
-# R1-R4 (repro.analysis) on the partitioned HLO — nothing times until the
-# home contract holds.  Families with no collective surface of their own
-# (striping/roofline are local-copy sweeps) map to an empty list.
+# R1-R8 (repro.analysis) on the partitioned HLO + jaxpr + exchange network
+# — nothing times until the home contract holds.  Families with no
+# collective surface of their own (striping/roofline are local-copy /
+# compile-only sweeps) map to an empty list.
 CHECK_ARGS = {
     "bench_microbench": [["--workload", "microbench", "--pods", "1x{D}",
                           "--policy", "all"]],
@@ -142,6 +149,7 @@ JSON_FILES = {
     "BENCH_engine.json": ("engine_",),
     "BENCH_kernels.json": ("kernel_",),
     "BENCH_serve.json": ("serve_",),
+    "BENCH_roofline.json": ("roofline_",),
 }
 
 
@@ -225,7 +233,7 @@ def main(argv=None) -> None:
     ap.add_argument("--skip-local", action="store_true",
                     help="skip the single-process (non-mesh) benches")
     ap.add_argument("--check", action="store_true",
-                    help="run homecheck (R1-R4) over each bench family "
+                    help="run homecheck (R1-R8) over each bench family "
                          "before timing it; the verdict is stamped into "
                          "every BENCH_*.json record")
     args = ap.parse_args(argv)

@@ -7,15 +7,22 @@ cache-home contract:
   R2 home-leak             device groups never span undeclared mesh axes
   R3 vmem-budget           pallas_call footprints fit per-core VMEM
   R4 donation-audit        large step-carried buffers are donated
+  R5 write-race/coverage   pallas_call block images partition each output
+  R6 network-certification exchange network 0-1-certified as a sorter
+  R7 index-arithmetic      merge-path ranks fit; BIG sentinel tie-stable
+  R8 grid-dead-lane        no pl.when lane that never executes
 
 Entry points: `Locale.check(...)` (repro.core.api), `check_workload` /
 `check_decode` / `check_artifacts` here, and the `launch/homecheck.py`
-CLI.  See README "Static analysis".
+CLI (``--rules`` selects a subset).  See README "Static analysis".
 """
 from repro.analysis.findings import (RULES, Finding, Report, Severity,
-                                     summarize)
+                                     normalize_rules, summarize)
 from repro.analysis.homecheck import (check_artifacts, check_decode,
                                       check_workload)
+from repro.analysis.netverify import (certify_supported_meshes,
+                                      zero_one_certify)
 
-__all__ = ["Finding", "Report", "Severity", "RULES", "summarize",
-           "check_artifacts", "check_decode", "check_workload"]
+__all__ = ["Finding", "Report", "Severity", "RULES", "normalize_rules",
+           "summarize", "check_artifacts", "check_decode", "check_workload",
+           "certify_supported_meshes", "zero_one_certify"]

@@ -29,9 +29,36 @@ RULES = {
           "locale never declared (GSPMD resharding of homed values)",
     "R3": "vmem-budget: pallas_call block+scratch footprint exceeds the "
           "per-core VMEM ceiling",
-    "R4": "donation-audit: large non-donated buffer copied across steps "
+    "R4": "donation-audit: large step-carried buffer copied across steps "
           "(an output with the exact shape of a non-aliased input)",
+    "R5": "write-race/coverage: pallas_call output index_maps must "
+          "partition the output over the grid (overlap = race ERROR, "
+          "gap = WARN) and input blocks must stay in bounds",
+    "R6": "network-certification: the engine's exchange network is a "
+          "structurally sound sorting network, 0-1-certified on every "
+          "supported mesh up to 16 devices",
+    "R7": "index-arithmetic: merge-path ranks must fit the index dtype at "
+          "declared block sizes; the BIG sentinel must be representable "
+          "and tie-stable in the key dtype",
+    "R8": "grid-dead-lane: pl.when predicates on program_id that no grid "
+          "index satisfies (scheduled cores that never execute)",
 }
+
+
+def normalize_rules(rules) -> Tuple[str, ...]:
+    """Resolve a rule filter (None / 'all' / ids) to canonical rule ids."""
+    if rules is None or rules == "all" or "all" in tuple(rules):
+        return tuple(RULES)
+    out = []
+    for r in ([rules] if isinstance(rules, str) else rules):
+        for part in str(r).replace(",", " ").split():
+            rid = part.upper()
+            if rid not in RULES:
+                raise ValueError(f"unknown rule {part!r}; "
+                                 f"known: {', '.join(RULES)}")
+            if rid not in out:
+                out.append(rid)
+    return tuple(out)
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,116 @@
+"""Committed known-bad fixtures the analyzer must provably flag.
+
+Each fixture is the minimal embodiment of one silent-corruption class the
+new rules exist to exclude; the tests (and anyone auditing the analyzer)
+can run R5-R8 against them and watch the exact finding fire.  They are
+library code, not test-local lambdas, so the CLI and future rules can
+reuse them as regression anchors.
+
+  `overlapping_index_map`  — R5 ERROR: two grid steps write the same
+                             output block (i // 2 collapses pairs).
+  `gapped_index_map`       — R5 WARN: half the output rows never written.
+  `oob_index_map`          — R5 ERROR: input blocks read past the array.
+  `dead_lane_kernel`       — R8 WARN: a `pl.when` lane no grid index
+                             satisfies.
+  `nonbijective_network`   — R6 ERROR (structural): one substage's
+                             ppermute sends every source to device 0.
+  `inverted_keep_network`  — R6 ERROR (0-1): keep flags swapped on a
+                             whole substage — still pairwise-complementary
+                             (structurally clean), but the network no
+                             longer sorts; only the 0-1 sweep catches it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, y_ref):
+    y_ref[...] = x_ref[...]
+
+
+def overlapping_index_map(rows: int = 4, cols: int = 128):
+    """pallas_call whose output index_map writes each block twice."""
+    def call(x):
+        return pl.pallas_call(
+            _copy_kernel, grid=(rows,),
+            in_specs=[pl.BlockSpec((1, cols), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1, cols), lambda i: (i // 2, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+            interpret=True)(x)
+    return jax.make_jaxpr(call)(
+        jax.ShapeDtypeStruct((rows, cols), jnp.float32))
+
+
+def gapped_index_map(rows: int = 4, cols: int = 128):
+    """pallas_call whose grid covers only the first half of the output."""
+    def call(x):
+        return pl.pallas_call(
+            _copy_kernel, grid=(rows // 2,),
+            in_specs=[pl.BlockSpec((1, cols), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1, cols), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+            interpret=True)(x)
+    return jax.make_jaxpr(call)(
+        jax.ShapeDtypeStruct((rows, cols), jnp.float32))
+
+
+def oob_index_map(rows: int = 4, cols: int = 128):
+    """pallas_call reading input blocks past the end of the array."""
+    def call(x):
+        return pl.pallas_call(
+            _copy_kernel, grid=(rows,),
+            in_specs=[pl.BlockSpec((1, cols), lambda i: (i + rows // 2, 0))],
+            out_specs=pl.BlockSpec((1, cols), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+            interpret=True)(x)
+    return jax.make_jaxpr(call)(
+        jax.ShapeDtypeStruct((rows, cols), jnp.float32))
+
+
+def dead_lane_kernel(rows: int = 4, cols: int = 128):
+    """pallas_call with a pl.when lane no program_id ever satisfies."""
+    def kernel(x_ref, y_ref):
+        y_ref[...] = x_ref[...]
+
+        @pl.when(pl.program_id(0) == rows + 3)
+        def _():
+            y_ref[...] = y_ref[...] * 2.0
+
+    def call(x):
+        return pl.pallas_call(
+            kernel, grid=(rows,),
+            in_specs=[pl.BlockSpec((1, cols), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1, cols), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+            interpret=True)(x)
+    return jax.make_jaxpr(call)(
+        jax.ShapeDtypeStruct((rows, cols), jnp.float32))
+
+
+def nonbijective_network(m: int = 4):
+    """A flat exchange network whose first perm routes everyone to 0."""
+    from repro.core.engine import exchange_network
+    from repro.core.localisation import LocalisationPolicy
+    net = exchange_network(LocalisationPolicy(), (m,))
+    lv0 = net.levels[0]
+    bad = dataclasses.replace(lv0, perm=tuple((s, 0) for s, _ in lv0.perm))
+    return dataclasses.replace(net, levels=(bad,) + net.levels[1:])
+
+
+def inverted_keep_network(m: int = 4):
+    """A structurally-sound network that fails the 0-1 principle: the
+    final stage's deepest substage keeps the wrong halves (flags still
+    complementary across each pair, so only 0-1 certification can tell)."""
+    from repro.core.engine import exchange_network
+    from repro.core.localisation import LocalisationPolicy
+    net = exchange_network(LocalisationPolicy(), (m,))
+    last = m.bit_length() - 2           # final merge stage index
+    levels = tuple(
+        dataclasses.replace(lv, keep_low=tuple(not b for b in lv.keep_low))
+        if (lv.stage, lv.substage) == (last, 0) else lv
+        for lv in net.levels)
+    return dataclasses.replace(net, levels=levels)

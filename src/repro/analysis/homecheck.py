@@ -1,12 +1,16 @@
-"""The homecheck orchestrator: trace, lower, extract facts, run R1-R4.
+"""The homecheck orchestrator: trace, lower, extract facts, run R1-R8.
 
 `check_workload` takes a `Locale` plus a registered workload name, builds
 the jitted entry point exactly as a caller would (`Locale.workload`),
 lowers it for a representative granular input, and runs every rule over
-the resulting artifacts (optimized SPMD HLO + jaxpr).  `check_decode` does
-the same for the serving decode step.  Nothing is ever *executed* — the
-whole analysis is static, so locality bugs surface at compile time, not in
-BENCH diffs.
+the resulting artifacts (optimized SPMD HLO + jaxpr + the engine's
+exchange-network descriptor).  `check_decode` does the same for the
+serving decode step.  Nothing is ever *executed* — the whole analysis is
+static, so locality bugs surface at compile time, not in BENCH diffs.
+
+`rules` filters which rules run (None/'all' = every rule); R1/R2 need HLO
+facts, R3/R5/R7/R8 the jaxpr, R6 the (policy, mesh-slice) the shard_map
+engine was built for.
 
 Budget notes (R1):
 
@@ -25,11 +29,14 @@ from __future__ import annotations
 import math
 from typing import Dict, Optional, Sequence
 
-from repro.analysis.findings import Report
+from repro.analysis.findings import Report, normalize_rules
+from repro.analysis.kernelcheck import (r5_block_coverage, r7_index_arith,
+                                        r8_dead_lanes)
+from repro.analysis.netverify import r6_network_certification
 from repro.analysis.rules import (R4_MIN_BYTES, r1_surprise_collective,
                                   r2_home_leak, r3_vmem_budget,
                                   r4_donation_audit)
-from repro.analysis.vmem import pallas_footprints
+from repro.analysis.vmem import pallas_call_facts, pallas_footprints
 
 
 def _mesh_axes(mesh):
@@ -44,33 +51,58 @@ def check_artifacts(target: str, hlo_text: str, *,
                     allowed_axes: Sequence[str] = (),
                     vmem_ceiling: Optional[int] = None,
                     donation_min_bytes: float = R4_MIN_BYTES,
+                    network=None,
                     context: Optional[Dict] = None,
+                    rules=None,
                     suppress: Sequence[str] = ()) -> Report:
-    """Run every rule over already-produced artifacts (the generic core).
+    """Run the selected rules over already-produced artifacts.
 
-    `predicted=None` skips R1 (no analytic budget); `mesh=None` skips R2.
+    `predicted=None` skips R1 (no analytic budget); `mesh=None` skips R2;
+    `jaxpr=None` skips R3/R5/R7/R8; `network=None` (else a
+    `(policy, sizes, axes)` triple for the shard_map engine) skips R6.
     """
     from repro.kernels import VMEM_BYTES_PER_CORE
     from repro.launch.hlo_cost import analyze
 
+    active = set(normalize_rules(rules))
     report = Report(target=target, context=dict(context or {}))
     facts = analyze(hlo_text)
     coll_ops = facts["collective_ops"]
 
-    if predicted is not None:
-        r1_surprise_collective(report, coll_ops, predicted)
-    else:
-        report.notes.append("R1 skipped: no analytic collective budget "
-                            "for this target")
-    if mesh is not None:
-        names, sizes = _mesh_axes(mesh)
-        r2_home_leak(report, coll_ops, names, sizes, allowed_axes)
-    elif coll_ops:
-        report.notes.append("R2 skipped: no mesh to map device groups onto")
+    if "R1" in active:
+        if predicted is not None:
+            r1_surprise_collective(report, coll_ops, predicted)
+        else:
+            report.notes.append("R1 skipped: no analytic collective budget "
+                                "for this target")
+    if "R2" in active:
+        if mesh is not None:
+            names, sizes = _mesh_axes(mesh)
+            r2_home_leak(report, coll_ops, names, sizes, allowed_axes)
+        elif coll_ops:
+            report.notes.append("R2 skipped: no mesh to map device groups "
+                                "onto")
     if jaxpr is not None:
-        r3_vmem_budget(report, pallas_footprints(jaxpr),
-                       vmem_ceiling or VMEM_BYTES_PER_CORE)
-    r4_donation_audit(report, hlo_text, min_bytes=donation_min_bytes)
+        if "R3" in active:
+            r3_vmem_budget(report, pallas_footprints(jaxpr),
+                           vmem_ceiling or VMEM_BYTES_PER_CORE)
+        if active & {"R5", "R7", "R8"}:
+            kfacts = pallas_call_facts(jaxpr)
+            if "R5" in active:
+                r5_block_coverage(report, kfacts)
+            if "R7" in active:
+                r7_index_arith(report, kfacts)
+            if "R8" in active:
+                r8_dead_lanes(report, kfacts)
+    if "R4" in active:
+        r4_donation_audit(report, hlo_text, min_bytes=donation_min_bytes)
+    if "R6" in active:
+        if network is not None:
+            policy, sizes, axes = network
+            r6_network_certification(report, policy, sizes, axes)
+        else:
+            report.notes.append("R6 skipped: target has no exchange "
+                                "network (not the shard_map engine)")
     return report.suppress(suppress)
 
 
@@ -84,11 +116,13 @@ def check_workload(locale, workload: str = "sort", *,
                    local_phase: Optional[str] = None,
                    logn: int = 12, reps: int = 4,
                    vmem_ceiling: Optional[int] = None,
+                   rules=None,
                    suppress: Sequence[str] = ()) -> Report:
     """Statically check one registered workload under `locale`.
 
     Builds the workload exactly as `Locale.workload` would, lowers it for a
-    granule-aligned int32 input of ~2**logn elements, and runs R1-R4.
+    granule-aligned int32 input of ~2**logn elements, and runs the selected
+    rules (default all of R1-R8).
     """
     import jax
     import jax.numpy as jnp
@@ -119,7 +153,10 @@ def check_workload(locale, workload: str = "sort", *,
         fn = locale.workload(workload, **kw)
         n = _round_up(1 << logn, granule)
         predicted = None
+        network = None
         if backend == "shard_map":
+            network = (policy, sort_sizes,
+                       axes if mesh is not None else None)
             predicted = collective_census(n, sort_sizes, policy,
                                           num_workers=num_workers,
                                           itemsize=4,
@@ -140,6 +177,7 @@ def check_workload(locale, workload: str = "sort", *,
         fn = locale.workload("microbench", reps=reps)
         n = _round_up(1 << logn, m)
         predicted = None
+        network = None
         context = dict(workload="microbench", reps=reps, policy=policy.name,
                        n=n, mesh=dict(zip(*_mesh_axes(mesh))) if mesh else None)
         target = "microbench"
@@ -155,13 +193,14 @@ def check_workload(locale, workload: str = "sort", *,
     jaxpr = jax.make_jaxpr(traceable)(x)
     return check_artifacts(target, hlo, jaxpr=jaxpr, predicted=predicted,
                            mesh=mesh, allowed_axes=axes,
-                           vmem_ceiling=vmem_ceiling, context=context,
-                           suppress=suppress)
+                           vmem_ceiling=vmem_ceiling, network=network,
+                           context=context, rules=rules, suppress=suppress)
 
 
 def check_decode(mesh=None, *, cfg_name: str = "qwen3-0.6b",
                  batch_slots: int = 4, max_len: int = 64,
                  prompt_len: int = 8,
+                 rules=None,
                  suppress: Sequence[str] = ()) -> Report:
     """Statically check the serving decode step (the `DecodeServer` jit).
 
@@ -203,4 +242,4 @@ def check_decode(mesh=None, *, cfg_name: str = "qwen3-0.6b",
                    mesh=dict(zip(*_mesh_axes(mesh))) if mesh else None)
     return check_artifacts("serve[decode]", hlo, jaxpr=jaxpr,
                            predicted=None, mesh=mesh, allowed_axes=allowed,
-                           context=context, suppress=suppress)
+                           context=context, rules=rules, suppress=suppress)

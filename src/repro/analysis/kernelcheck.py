@@ -1,0 +1,260 @@
+"""Rules R5/R7/R8: static checks on every `pallas_call`'s block schedule.
+
+Facts come from `vmem.pallas_call_facts` (grid, per-operand BlockSpecs with
+concretely evaluable index maps, the kernel jaxpr); nothing here traces or
+executes a kernel.
+
+  R5 write-race/coverage — replay every output index map over the full
+      grid.  Grid dims the block index does not depend on are *revisit*
+      dims (sequential accumulation, e.g. flash-attention's KV loop) and
+      are fine; two grid steps that differ in a dim the index DOES depend
+      on yet land on the same output block are a write race (ERROR —
+      last-writer-wins nondeterminism across cores).  A block cell of the
+      output no grid step ever writes is a gap (WARN — uninitialised
+      output).  Input blocks whose start lies fully outside the array are
+      reads of nothing but clamp padding (ERROR).
+  R7 index-arithmetic/sentinel — merge-path rank arithmetic runs in the
+      index dtype; a block whose merged domain (2 x block elements)
+      exceeds int32 overflows ranks exactly at production chunk sizes
+      (ERROR).  The BIG sentinel (`core.sort.pad_value`) must cast into
+      the key dtype without clipping and compare strictly-after every
+      finite key (nothing real may tie with padding): a clipped cast is
+      an ERROR, a finite-max sentinel that ties is a WARN.
+  R8 grid-dead-lane — a `pl.when` predicate comparing `program_id(axis)`
+      against a constant that no value in [0, grid[axis]) satisfies is a
+      lane that never executes: the grid step is scheduled, occupies a
+      core, and does nothing (WARN — wasted cores, usually a stale grid
+      constant).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Report, Severity
+from repro.analysis.vmem import OperandFacts, PallasCallFacts
+
+#: R5 replays index maps concretely; cap the enumeration.
+MAX_GRID_POINTS = 65536
+
+#: R8 evaluates predicates over a grid axis; cap the domain.
+MAX_AXIS_DOMAIN = 1 << 20
+
+
+def _grid_points(grid: Sequence[int]):
+    return itertools.product(*(range(int(g)) for g in grid))
+
+
+def _dependent_dims(mapping: Dict[Tuple[int, ...], Tuple[int, ...]],
+                    grid: Sequence[int]) -> List[int]:
+    """Grid dims whose value ever changes the block index.
+
+    Exact, not sampled: dim d is independent iff the map is constant on
+    every fibre {points equal outside d} — checked by grouping on the
+    point with coordinate d zeroed.
+    """
+    deps = []
+    for d in range(len(grid)):
+        groups: Dict[Tuple[int, ...], Tuple[int, ...]] = {}
+        dependent = False
+        for pt, idx in mapping.items():
+            key = pt[:d] + (0,) + pt[d + 1:]
+            if groups.setdefault(key, idx) != idx:
+                dependent = True
+                break
+        if dependent:
+            deps.append(d)
+    return deps
+
+
+def r5_block_coverage(report: Report, facts: List[PallasCallFacts]) -> None:
+    """Prove each output's block images partition it; bound input reads."""
+    for fc in facts:
+        if not fc.static_grid:
+            report.notes.append(
+                f"R5 skipped for {fc.name}: dynamic grid bounds")
+            continue
+        npts = int(np.prod([int(g) for g in fc.grid], dtype=np.int64)) \
+            if fc.grid else 1
+        if npts > MAX_GRID_POINTS:
+            report.notes.append(
+                f"R5 skipped for {fc.name}: grid {fc.grid} has {npts:,} "
+                f"steps (> {MAX_GRID_POINTS:,})")
+            continue
+        for k, op in enumerate(fc.outputs):
+            _check_output(report, fc, k, op)
+        for k, op in enumerate(fc.inputs):
+            _check_input(report, fc, k, op)
+
+
+def _check_output(report: Report, fc: PallasCallFacts, k: int,
+                  op: OperandFacts) -> None:
+    mapping = {pt: op.index_map(*pt) for pt in _grid_points(fc.grid)}
+    deps = _dependent_dims(mapping, fc.grid)
+
+    # write race: same block from two assignments of the dependent dims
+    first: Dict[Tuple, Tuple] = {}
+    for pt, idx in mapping.items():
+        dep_pt = tuple(pt[d] for d in deps)
+        prev = first.setdefault(idx, dep_pt)
+        if prev != dep_pt:
+            report.add(Finding(
+                "R5", Severity.ERROR, "pallas_call", shape=fc.name,
+                message=f"write race on output {k}: grid steps "
+                        f"{tuple(fc.grid)}-indexed at dependent dims "
+                        f"{deps} values {prev} and {dep_pt} both write "
+                        f"block {idx} — overlapping writes race across "
+                        f"cores (non-dependent dims would be legitimate "
+                        f"sequential revisits)"))
+            break
+
+    # coverage: every aligned block cell of the output must be written
+    block = op.full_block
+    need = [max(1, -(-a // b)) for a, b in zip(op.array_shape, block)]
+    written = set(mapping.values())
+    for cell in itertools.product(*(range(n) for n in need)):
+        if cell not in written:
+            report.add(Finding(
+                "R5", Severity.WARN, "pallas_call", shape=fc.name,
+                message=f"coverage gap on output {k}: block cell {cell} "
+                        f"of {tuple(need)} (array {op.array_shape}, "
+                        f"block {block}) is never written — that region "
+                        f"of the output is uninitialised"))
+            break
+
+
+def _check_input(report: Report, fc: PallasCallFacts, k: int,
+                 op: OperandFacts) -> None:
+    block = op.full_block
+    for pt in _grid_points(fc.grid):
+        idx = op.index_map(*pt)
+        for d, (i, b, a) in enumerate(zip(idx, block, op.array_shape)):
+            if i < 0 or i * b >= max(a, 1):
+                report.add(Finding(
+                    "R5", Severity.ERROR, "pallas_call", shape=fc.name,
+                    message=f"out-of-bounds read on input {k}: grid step "
+                            f"{pt} maps dim {d} to block {i} (block size "
+                            f"{b}, array extent {a}) — the block starts "
+                            f"entirely outside the array"))
+                return
+
+
+def r7_index_arith(report: Report, facts: List[PallasCallFacts],
+                   index_dtype: str = "int32",
+                   sentinel: Optional[Any] = None) -> None:
+    """Rank-domain overflow + BIG-sentinel safety per pallas_call.
+
+    `sentinel` overrides the repo's `pad_value` (fixture hook); by default
+    each key dtype is checked against what the engine actually pads with.
+    """
+    from repro.core.sort import pad_value
+    imax = np.iinfo(np.dtype(index_dtype)).max
+    for fc in facts:
+        for k, op in enumerate(fc.inputs + fc.outputs):
+            numel = int(np.prod(op.full_block, dtype=np.int64))
+            if 2 * numel > imax:
+                report.add(Finding(
+                    "R7", Severity.ERROR, "pallas_call", shape=fc.name,
+                    actual_bytes=float(2 * numel),
+                    predicted_bytes=float(imax),
+                    message=f"operand {k} block {op.full_block} merges "
+                            f"2x{numel:,} elements but merge-path ranks "
+                            f"are {index_dtype} (max {imax:,}) — rank "
+                            f"arithmetic overflows at this chunk size"))
+        for dt in sorted({op.dtype for op in fc.inputs + fc.outputs}):
+            dtype = np.dtype(dt)
+            if dtype.kind not in "fiu":
+                continue
+            big = sentinel if sentinel is not None else pad_value(dtype)
+            _check_sentinel(report, fc.name, dtype, big)
+
+
+def _check_sentinel(report: Report, name: str, dtype: np.dtype,
+                    big: Any) -> None:
+    with np.errstate(over="ignore", invalid="ignore"):
+        lowered = np.asarray(big).astype(dtype)
+    if dtype.kind == "f":
+        limit = np.inf
+        clipped = (np.isfinite(big) and
+                   (np.isinf(lowered) or float(lowered) != float(big)))
+    else:
+        limit = np.iinfo(dtype).max
+        clipped = int(lowered) != int(big)
+    if clipped:
+        report.add(Finding(
+            "R7", Severity.ERROR, "pallas_call", shape=name,
+            message=f"sentinel {big!r} is not representable in key dtype "
+                    f"{dtype.name} (lowers to {lowered}) — padding would "
+                    f"corrupt real keys"))
+    elif dtype.kind == "f" and not np.isinf(lowered):
+        report.add(Finding(
+            "R7", Severity.WARN, "pallas_call", shape=name,
+            message=f"sentinel {big!r} is finite in {dtype.name}: real "
+                    f"keys equal to it tie with padding and can be "
+                    f"dropped by the merge-split keep rule — use inf"))
+    elif dtype.kind in "iu" and int(lowered) != int(limit):
+        report.add(Finding(
+            "R7", Severity.WARN, "pallas_call", shape=name,
+            message=f"sentinel {big!r} is below {dtype.name} max "
+                    f"({limit}): keys in ({big!r}, {limit}] sort after "
+                    f"padding and leak into the kept halves"))
+
+
+# ---------------------------------------------------------------------------
+# R8: dead predicated lanes
+# ---------------------------------------------------------------------------
+_CMP = {"eq": np.equal, "ne": np.not_equal, "lt": np.less, "le": np.less_equal,
+        "gt": np.greater, "ge": np.greater_equal}
+
+
+def _literal_val(v) -> Optional[float]:
+    val = getattr(v, "val", None)
+    if val is None:
+        return None
+    arr = np.asarray(val)
+    return float(arr) if arr.ndim == 0 else None
+
+
+def _dead_predicates(kernel_jaxpr, grid) -> List[str]:
+    """Messages for program_id comparisons no grid value satisfies."""
+    pid_axis: Dict[Any, int] = {}       # var -> grid axis
+    dead: List[str] = []
+    for eqn in kernel_jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "program_id":
+            pid_axis[eqn.outvars[0]] = int(eqn.params["axis"])
+        elif (prim == "convert_element_type"
+              and not hasattr(eqn.invars[0], "val")
+              and eqn.invars[0] in pid_axis):
+            pid_axis[eqn.outvars[0]] = pid_axis[eqn.invars[0]]
+        elif prim in _CMP and len(eqn.invars) == 2:
+            for a, b, flip in ((eqn.invars[0], eqn.invars[1], False),
+                               (eqn.invars[1], eqn.invars[0], True)):
+                axis = None if hasattr(a, "val") else pid_axis.get(a)
+                lit = _literal_val(b)
+                if axis is None or lit is None or axis >= len(grid):
+                    continue
+                dom = min(int(grid[axis]), MAX_AXIS_DOMAIN)
+                ids = np.arange(dom)
+                sat = (_CMP[prim](lit, ids) if flip
+                       else _CMP[prim](ids, lit))
+                if not bool(np.any(sat)):
+                    dead.append(
+                        f"predicate program_id({axis}) {prim} {lit:g} is "
+                        f"false for every grid index in [0, {grid[axis]})")
+                break
+    return dead
+
+
+def r8_dead_lanes(report: Report, facts: List[PallasCallFacts]) -> None:
+    """Flag predicated lanes that provably never execute."""
+    for fc in facts:
+        if fc.kernel_jaxpr is None or not fc.static_grid:
+            continue
+        for msg in _dead_predicates(fc.kernel_jaxpr, fc.grid):
+            report.add(Finding(
+                "R8", Severity.WARN, "pallas_call", shape=fc.name,
+                message=f"dead lane: {msg} — the guarded block never "
+                        f"runs on any core (stale grid constant?)"))

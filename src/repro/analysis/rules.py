@@ -21,6 +21,10 @@ every rule from them.
   R4 donation-audit — a large entry parameter that is not donation-aliased
       but whose exact logical type reappears as an output is a buffer XLA
       must copy every step ('free as soon as finished', paper step 5).
+
+R5/R7/R8 (pallas block schedules and kernel jaxprs) live in
+`analysis.kernelcheck`; R6 (exchange-network certification) in
+`analysis.netverify`.  The orchestrator runs all eight.
 """
 from __future__ import annotations
 

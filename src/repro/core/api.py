@@ -299,18 +299,23 @@ class Locale:
                              f"{sorted(_WORKLOADS)}") from None
         return builder(self, **kw)
 
-    def check(self, workload: str = "sort", *, suppress=(), **kw):
+    def check(self, workload: str = "sort", *, rules=None, suppress=(),
+              **kw):
         """Statically verify a workload's lowering against this locale.
 
         The homecheck hook: lowers ``self.workload(workload, ...)`` for a
-        representative input and runs rules R1-R4 (surprise collectives,
-        home leaks, VMEM budget, donation audit) over the partitioned HLO
-        and jaxpr without executing anything.  Returns an
-        `analysis.Report`; ``report.clean`` is the contract.  `suppress`
-        drops findings by rule id (e.g. ``suppress=("R4",)``).
+        representative input and runs rules R1-R8 (surprise collectives,
+        home leaks, VMEM budget, donation audit, pallas write-race/
+        coverage, exchange-network certification, index-arithmetic lint,
+        dead grid lanes) over the partitioned HLO, jaxpr, and exchange
+        network without executing anything.  Returns an
+        `analysis.Report`; ``report.clean`` is the contract.  `rules`
+        selects a subset (e.g. ``rules=("R5", "R6")``; None = all);
+        `suppress` drops findings by rule id (e.g. ``suppress=("R4",)``).
         """
         from repro.analysis import check_workload
-        return check_workload(self, workload, suppress=suppress, **kw)
+        return check_workload(self, workload, rules=rules,
+                              suppress=suppress, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -81,11 +81,13 @@ kernel; its merge tree is always the reference form.
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 from functools import partial
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
@@ -197,10 +199,175 @@ def _merge_split(run, other, chunk: int, keep_low):
     return jnp.where(keep_low, both[:chunk], both[chunk:])
 
 
+# ---------------------------------------------------------------------------
+# the exchange network, as data
+# ---------------------------------------------------------------------------
+#
+# The merge-split network's structure — which device exchanges with which,
+# over which mesh axis, keeping which half — used to live only inside the
+# traced `_localised_shard` loop, where nothing could inspect it.  It is now
+# built once as a plain descriptor (`exchange_network`) that BOTH the runtime
+# (the shard_map body below iterates it) and the static analyzer
+# (`repro.analysis.netverify`, rule R6) consume, so "the schedule the engine
+# runs" and "the schedule the analyzer certifies" cannot drift apart.
+
+@dataclass(frozen=True)
+class NetExchange:
+    """One pairwise compare-exchange substage: a ppermute + merge-split.
+
+    `partner`/`keep_low` are the device-space view over all m linearised
+    devices (partner[d] = d XOR 2^substage; keep_low[d] = low-half iff the
+    bitonic direction bit says so); `axis`/`axis_stride`/`perm` are the
+    on-axis routing the runtime hands to `lax.ppermute`.
+    """
+    stage: int                      # merge stage i (sorts runs of 2^(i+1))
+    substage: int                   # j: global device-index bit toggled
+    axis: str                       # mesh axis the ppermute runs over
+    axis_stride: int                # stride on that axis's local index
+    stride: int                     # global linearised stride == 2^substage
+    perm: Tuple[Tuple[int, int], ...]   # on-axis (src, dst) pairs
+    partner: Tuple[int, ...]        # device-space partner map (involution)
+    keep_low: Tuple[bool, ...]      # device-space keep flag
+
+
+@dataclass(frozen=True)
+class NetReplay:
+    """One cross-pod substage replayed locally per pod (hierarchical path).
+
+    `pod_partner`/`pod_keep_low` index pod space (what the replay loop
+    actually uses on the gathered rows); `partner`/`keep_low` are the
+    equivalent device-space view — identical formulas to `NetExchange`,
+    because toggling pod bit (substage - log_inner) of q toggles exactly
+    bit `substage` of d = q * m_inner + inner.
+    """
+    stage: int
+    substage: int
+    stride: int                     # global stride == 2^substage >= m_inner
+    pod_partner: Tuple[int, ...]
+    pod_keep_low: Tuple[bool, ...]
+    partner: Tuple[int, ...]
+    keep_low: Tuple[bool, ...]
+
+
+@dataclass(frozen=True)
+class NetGatherReplay:
+    """One hierarchical top stage: ONE all_gather over the pod axes, then
+    the stage's cross-pod substages replayed per pod on the gathered rows,
+    each device finally keeping its own pod's chunk."""
+    stage: int
+    axes: Union[str, Tuple[str, ...]]   # outer (pod) axes gathered over
+    replays: Tuple[NetReplay, ...]
+
+
+@dataclass(frozen=True)
+class ExchangeNetwork:
+    """The localised engine's full exchange plan for one (policy, mesh).
+
+    `levels` holds `NetExchange` / `NetGatherReplay` entries in execution
+    order; `substages()` flattens to the device-space compare-exchange
+    sequence (the thing the 0-1 principle certifies).  `relayout` records
+    whether the plan starts with the hash-homing all_to_all.
+    """
+    axes: Tuple[str, ...]
+    sizes: Tuple[int, ...]
+    m: int
+    hier: bool
+    relayout: bool
+    levels: Tuple[Union[NetExchange, NetGatherReplay], ...]
+
+    def substages(self):
+        """Device-space compare-exchanges (NetExchange | NetReplay), in order."""
+        for lv in self.levels:
+            if isinstance(lv, NetGatherReplay):
+                for rp in lv.replays:
+                    yield rp
+            else:
+                yield lv
+
+
+def _keep_low(m: int, i: int, j: int) -> np.ndarray:
+    """Bitonic keep flags over device space: device d keeps the low half of
+    the merged pair iff its low/high role (bit j) matches the run's
+    direction (bit i+1)."""
+    d = np.arange(m)
+    ascending = ((d >> (i + 1)) & 1) == 0
+    is_low = ((d >> j) & 1) == 0
+    return is_low == ascending
+
+
+def exchange_network(policy: LocalisationPolicy, sizes: Sequence[int],
+                     axes: Optional[Sequence[str]] = None) -> ExchangeNetwork:
+    """The merge-split network descriptor for one (policy, mesh-slice).
+
+    `sizes` are the sort-axis sizes in axis order, inner (ICI) last —
+    the same contract as `exchange_schedule`; `axes` the matching mesh axis
+    names (synthesised as ax0.. when only the shape matters, e.g. for
+    certification).  Raises ValueError for non-localised policies (their
+    all_gather levels have no merge-split network to describe) and for a
+    hierarchical policy on a single-axis shape — identical validation to
+    `shard_map_sort`, so a descriptor exists exactly when the engine would
+    run the network.
+    """
+    sizes = tuple(int(s) for s in sizes)
+    if axes is None:
+        axes = tuple(f"ax{k}" for k in range(len(sizes)))
+    axes = tuple(axes)
+    if len(axes) != len(sizes):
+        raise ValueError(f"axes {axes!r} do not match sizes {sizes!r}")
+    for a, s in zip(axes, sizes):
+        if s < 1 or (s & (s - 1)) != 0:
+            raise ValueError(f"axis {a!r} size {s} not a power of 2")
+    if not policy.localised:
+        raise ValueError(
+            f"policy {policy.name!r} is non-localised: every level is an "
+            f"all_gather full exchange — there is no merge-split network")
+    hier = policy.outer is not None
+    if hier and len(sizes) < 2:
+        raise ValueError(
+            f"hierarchical policy {policy.name!r} needs (pod, ..., inner) "
+            f"axis sizes, got {sizes!r} — same contract as shard_map_sort")
+    m = math.prod(sizes)
+    m_inner = sizes[-1]
+    log_inner = m_inner.bit_length() - 1
+    n_pods = m // m_inner
+    d = np.arange(m)
+    levels: List[Union[NetExchange, NetGatherReplay]] = []
+    for i in range(m.bit_length() - 1):
+        j0 = i
+        if hier and i >= log_inner:
+            q = np.arange(n_pods)
+            replays = []
+            for j in range(i, log_inner - 1, -1):
+                t = 1 << (j - log_inner)            # pod-index stride
+                pod_keep = ((((q >> (j - log_inner)) & 1) == 0)
+                            == (((q >> (i + 1 - log_inner)) & 1) == 0))
+                replays.append(NetReplay(
+                    stage=i, substage=j, stride=1 << j,
+                    pod_partner=tuple(int(p) for p in q ^ t),
+                    pod_keep_low=tuple(bool(b) for b in pod_keep),
+                    partner=tuple(int(p) for p in d ^ (1 << j)),
+                    keep_low=tuple(bool(b) for b in _keep_low(m, i, j))))
+            levels.append(NetGatherReplay(
+                stage=i, axes=_axis_name(axes[:-1]), replays=tuple(replays)))
+            j0 = log_inner - 1
+        for j in range(j0, -1, -1):
+            ax, t = _stride_axis(axes, sizes, j)
+            na = sizes[axes.index(ax)]
+            levels.append(NetExchange(
+                stage=i, substage=j, axis=ax, axis_stride=t, stride=1 << j,
+                perm=tuple((a, a ^ t) for a in range(na)),
+                partner=tuple(int(p) for p in d ^ (1 << j)),
+                keep_low=tuple(bool(b) for b in _keep_low(m, i, j))))
+    return ExchangeNetwork(
+        axes=axes, sizes=sizes, m=m, hier=hier,
+        relayout=policy.homing == Homing.HASH_INTERLEAVED,
+        levels=tuple(levels))
+
+
 def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
                      hash_homed: bool, local_sort: LocalSort, interpret: bool,
                      axes: Tuple[str, ...], sizes: Tuple[int, ...],
-                     hier: bool, local_phase: str):
+                     net: "ExchangeNetwork", local_phase: str):
     """Per-device body, localised: one-shot relayout + merge-split tree."""
     name = _axis_name(axes)
     if hash_homed:
@@ -228,30 +395,25 @@ def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
     # memory stays at chunk size — no device ever materialises more than a
     # pod's worth of chunks — and the sorted array ends naturally distributed
     # in ownership order (compare-exchange -> merge-split block sorting is
-    # exact by the 0-1 principle, given sorted blocks).
+    # exact by the 0-1 principle, given sorted blocks).  The structure —
+    # who exchanges with whom, keeping which half — comes from the
+    # `exchange_network` descriptor, the same object `repro.analysis`'s
+    # rule R6 certifies; the loop below only routes it.
     d = jax.lax.axis_index(name)          # linearised (pod-major) device id
     m_inner = sizes[-1]
     log_inner = m_inner.bit_length() - 1
-    n_pods = m // m_inner
-    outer = _axis_name(axes[:-1]) if len(axes) > 1 else None
-    pods_idx = jnp.arange(n_pods)
-    for i in range(m.bit_length() - 1):
-        j0 = i
-        if hier and i >= log_inner:
+    for lv in net.levels:
+        if isinstance(lv, NetGatherReplay):
             # hierarchical top level: ONE all_gather over the pod axes pulls
             # the n_pods chunks at my inner index; this stage's cross-pod
-            # substages (j = i..log_inner — they toggle only pod bits, so
-            # everything they read sits in the gathered set) are replayed
-            # locally for every pod, then I keep my own pod's chunk.  One
-            # DCN collective replaces (i - log_inner + 1) pairwise DCN hops.
-            pods = jax.lax.all_gather(run, outer, axis=0)  # (n_pods, chunk)
-            for j in range(i, log_inner - 1, -1):
-                t = 1 << (j - log_inner)            # pod-index stride
-                partner = pods[pods_idx ^ t]
-                # device (q, inner) bits above log_inner are q's bits:
-                asc = ((pods_idx >> (i + 1 - log_inner)) & 1) == 0
-                low = ((pods_idx >> (j - log_inner)) & 1) == 0
-                keep_low = low == asc
+            # substages (they toggle only pod bits, so everything they read
+            # sits in the gathered set) are replayed locally for every pod,
+            # then I keep my own pod's chunk.  One DCN collective replaces
+            # (stage - log_inner + 1) pairwise DCN hops.
+            pods = jax.lax.all_gather(run, lv.axes, axis=0)  # (n_pods, chunk)
+            for rp in lv.replays:
+                partner = pods[np.asarray(rp.pod_partner)]
+                keep_low = jnp.asarray(np.asarray(rp.pod_keep_low))
                 if local_phase == "pallas":
                     # batched merge-path replay: row q keeps only its half
                     pods = _merge_split_kernel(pods, partner, keep_low,
@@ -261,15 +423,9 @@ def _localised_shard(xloc, *, m: int, chunk: int, w_per_dev: int,
                     pods = jnp.where(keep_low[:, None], merged[:, :chunk],
                                      merged[:, chunk:])
             run = jnp.take(pods, d >> log_inner, axis=0)
-            j0 = log_inner - 1                      # intra-pod substages left
-        for j in range(j0, -1, -1):
-            ax, t = _stride_axis(axes, sizes, j)
-            na = sizes[axes.index(ax)]
-            perm = [(a, a ^ t) for a in range(na)]
-            other = jax.lax.ppermute(run, ax, perm)  # neighbour-only traffic
-            ascending = ((d >> (i + 1)) & 1) == 0
-            is_low = ((d >> j) & 1) == 0
-            keep_low = is_low == ascending
+        else:
+            other = jax.lax.ppermute(run, lv.axis, list(lv.perm))
+            keep_low = jnp.asarray(np.asarray(lv.keep_low))[d]
             if local_phase == "pallas":
                 run = _merge_split_kernel(run[None], other[None], keep_low,
                                           interpret=interpret)[0]
@@ -368,7 +524,8 @@ def shard_map_sort(x, mesh: Mesh,
         body = partial(_localised_shard, m=m, chunk=chunk,
                        w_per_dev=w_per_dev, hash_homed=hash_homed,
                        local_sort=local_sort, interpret=interpret,
-                       axes=axes, sizes=sizes, hier=hier,
+                       axes=axes, sizes=sizes,
+                       net=exchange_network(policy, sizes, axes),
                        local_phase=local_phase)
         out_spec = P(spec_axis)                    # chunk-contiguous output
     else:

@@ -54,6 +54,11 @@ def merge_split(a, b, keep_low, *, interpret: bool = True):
     keep = jnp.asarray(keep_low)
     if keep.ndim == 0:
         keep = keep[None]
+    if keep.ndim != 1 or keep.shape[0] not in (1, rows):
+        raise ValueError(
+            f"keep_low must be a scalar or a length-{rows} vector of "
+            f"per-row flags (one per merge-split row); got shape "
+            f"{jnp.shape(keep_low)} for a/b of shape {(rows, C)}")
     keep = jnp.broadcast_to(keep.astype(jnp.int32)[:, None], (rows, 1))
     return pl.pallas_call(
         _kernel,

@@ -134,6 +134,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     n_chips = mesh.size
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):         # jax <= 0.4.x wraps in a list
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:

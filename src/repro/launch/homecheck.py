@@ -4,14 +4,20 @@
         --workload sort|engine|microbench|serve|all \
         [--pods PxD[xM]] [--policy flat|hash|nonloc|nonloc-hash|hier|hier-hash] \
         [--backend shard_map|constraint] [--logn N] [--num-workers W] \
-        [--suppress R4 ...] [--json] [--verbose]
+        [--rules all|R1 R5 R6 ...] [--suppress R4 ...] [--json] [--verbose]
 
 Lowers the selected workload(s) over the requested (emulated) mesh and
-runs rules R1-R4 (see `repro.analysis`) on the partitioned HLO + jaxpr —
-nothing executes.  ``--pods`` sets ``XLA_FLAGS`` itself, so the command is
-self-sufficient on a laptop.  Exit status 1 on any ERROR-severity finding
-(and 2 on a driver failure), so `runtime.ft.Supervisor`/CI can supervise
-it uniformly.
+runs rules R1-R8 (see `repro.analysis`) on the partitioned HLO + jaxpr +
+exchange network — nothing executes.  ``--rules`` selects a subset
+(default all): R1/R2 collective budget + home leaks, R3 VMEM, R4
+donation, R5 pallas write-race/coverage, R6 sorting-network
+certification, R7 index-arithmetic/sentinel lint, R8 dead grid lanes.
+When R6 is active the sweep also prints the repo-wide certificate: every
+supported policy 0-1-certified over every mesh shape up to 16 devices.
+``--pods`` sets ``XLA_FLAGS`` itself, so the command is self-sufficient
+on a laptop.  Exit status 1 on any ERROR-severity finding (and 2 on a
+driver failure), so `runtime.ft.Supervisor`/CI can supervise it
+uniformly.
 """
 from __future__ import annotations
 
@@ -70,6 +76,10 @@ def main(argv=None) -> int:
     ap.add_argument("--num-workers", type=int, default=None)
     ap.add_argument("--reps", type=int, default=4, help="microbench passes")
     ap.add_argument("--arch", default="qwen3-0.6b", help="serve config")
+    ap.add_argument("--rules", nargs="*", default=None, metavar="RULE",
+                    help="rules to run (R1..R8 or 'all'; default all); "
+                         "with R6 active the repo-wide mesh certificate "
+                         "is printed too")
     ap.add_argument("--suppress", nargs="*", default=(), metavar="RULE",
                     help="rule ids to drop from the report (e.g. R4)")
     ap.add_argument("--json", action="store_true", dest="as_json")
@@ -86,9 +96,15 @@ def main(argv=None) -> int:
 
     import jax
 
-    from repro.analysis import check_decode, check_workload, summarize
+    from repro.analysis import (certify_supported_meshes, check_decode,
+                                check_workload, normalize_rules, summarize)
     from repro.core.api import Locale
     from repro.launch.mesh import make_host_mesh
+
+    try:
+        rules = normalize_rules(args.rules)
+    except ValueError as e:
+        ap.error(str(e))
 
     if args.pods is not None:
         p, d, m = args.pods
@@ -115,6 +131,7 @@ def main(argv=None) -> int:
     for name in names:
         if name == "serve":
             reports.append(check_decode(mesh, cfg_name=args.arch,
+                                        rules=rules,
                                         suppress=args.suppress))
             continue
         for pname in pol_names(name):
@@ -123,12 +140,28 @@ def main(argv=None) -> int:
             reports.append(check_workload(
                 locale, name, backend=args.backend,
                 num_workers=args.num_workers, logn=args.logn,
-                reps=args.reps, suppress=args.suppress))
+                reps=args.reps, rules=rules, suppress=args.suppress))
 
     for rep in reports:
         print(rep.to_json() if args.as_json
               else rep.format(verbose=args.verbose))
+
+    cert_errors = 0
+    if "R6" in rules:
+        cert = certify_supported_meshes()
+        for pname, rec in sorted(cert.items()):
+            meshes = ", ".join("x".join(map(str, s))
+                               for s in rec["certified"])
+            line = (f"R6 certificate [{pname}]: "
+                    f"{len(rec['certified'])} mesh(es) 0-1 certified"
+                    f" ({meshes})")
+            if rec["failed"]:
+                cert_errors += len(rec["failed"])
+                line += f"; FAILED: {rec['failed']}"
+            print(line)
+
     dirty, errors = summarize(reports)
+    errors += cert_errors
     total = sum(len(r.findings) for r in reports)
     print(f"homecheck: {len(reports)} target(s), {total} finding(s), "
           f"{errors} error(s)")

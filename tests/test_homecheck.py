@@ -1,5 +1,6 @@
 """homecheck: every rule R1-R4 provably fires on a committed fixture, and
-the analyzer runs clean over every registered workload x policy x backend.
+the analyzer runs clean over every registered workload x policy x backend
+(R5-R8 fixtures and the network-certification sweep: test_kernelcheck.py).
 
 The R1/R2 fixtures need a partitioned lowering, so they run in one
 8-device subprocess; R3/R4 and the Report API are single-device and run
@@ -180,6 +181,9 @@ SWEEP = [
                          "--backend", "constraint"]),
     ("engine-hier", ["--workload", "engine", "--pods", "2x2",
                      "--policy", "hier"]),
+    ("flat-new-rules", ["--workload", "sort", "--pods", "1x4",
+                        "--policy", "all", "--rules", "R5", "R6", "R7",
+                        "R8"]),
 ]
 
 
