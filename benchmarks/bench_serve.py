@@ -12,11 +12,20 @@ per scheduling policy, on the same model/params/mesh, and reports:
   serve_<policy>_<mesh>_wait      p50/p99 admission wait (wave-step units,
                                   deterministic — structure row, no us)
   serve_<policy>_<mesh>_relayout  cross-home session-cache relayout bytes,
-                                  split inter-pod/intra-pod on pod meshes
+                                  split inter-pod/intra-pod on pod meshes,
+                                  plus the homed scheduler's affinity hits
   serve_check_<mesh>              the acceptance facts: decode outputs
                                   bit-identical across policies, homed
                                   moved strictly fewer cross-home bytes,
                                   homed took no more deterministic steps
+
+Every row family is emitted twice: once for the classic mixed stream and
+once with a ``_prefix`` suffix for the *shared-prefix* stream — zipf-skewed
+sessions whose requests all open with that session's sticky prompt prefix.
+Today the prefix rows measure the same scheduler (prefill recomputes the
+prefix); they are the committed acceptance stream the ROADMAP's KV
+prefix-reuse item will be gated on — when prefix pooling lands, these are
+the rows that must move.
 
 Decode outputs are bit-identical across policies because the server pads
 every prefill to the fixed ``--prompt-pad`` bucket (row numerics never
@@ -57,6 +66,32 @@ def make_stream(cfg, n: int, slots: int, prompt_pad: int, sessions: int,
     return reqs
 
 
+def make_prefix_stream(cfg, n: int, slots: int, prompt_pad: int,
+                       sessions: int, short_new: int, long_new: int,
+                       seed: int):
+    """Shared-prefix stream: every request of a session opens with that
+    session's sticky prompt prefix (half the pad bucket), followed by a
+    fresh suffix — the KV prefix-reuse acceptance stream."""
+    rng = np.random.RandomState(seed + 1)
+    weights = 1.0 / (1.0 + np.arange(sessions))
+    weights /= weights.sum()
+    prefix_len = max(1, prompt_pad // 2)
+    prefixes = rng.randint(0, cfg.vocab_size,
+                           (sessions, prefix_len)).astype(np.int32)
+    reqs = []
+    for rid in range(n):
+        sess = int(rng.choice(sessions, p=weights))
+        slen = int(rng.randint(1, prompt_pad - prefix_len + 1))
+        suffix = rng.randint(0, cfg.vocab_size, slen).astype(np.int32)
+        reqs.append(Request(
+            rid=rid,
+            prompt=np.concatenate([prefixes[sess], suffix]),
+            max_new=int(long_new if rng.rand() < 0.3 else short_new),
+            session=f"s{sess}",
+            t_arrive=float(rid // (2 * slots)) * (prompt_pad + short_new)))
+    return reqs
+
+
 def mesh_tag(pods, n_dev: int) -> str:
     return (f"pods{'x'.join(map(str, pods))}" if pods else f"flat{n_dev}")
 
@@ -88,7 +123,9 @@ def main(argv=None):
     tag = mesh_tag(pods, len(jax.devices()))
 
     print("name,us_per_call,derived")
-    outs, stats = {}, {}
+    streams = (("", make_stream), ("_prefix", make_prefix_stream))
+    outs = {lbl: {} for lbl, _ in streams}
+    stats = {lbl: {} for lbl, _ in streams}
     for policy in ("fifo", "homed"):
         srv = DecodeServer(cfg, params, batch_slots=args.slots,
                            max_len=args.max_len, plan=plan,
@@ -100,37 +137,45 @@ def main(argv=None):
                            max_new=2))
         srv.run()
         from repro.runtime.scheduler import make_scheduler
-        wall_us = float("inf")
-        for _ in range(max(1, args.reps)):     # best-of-reps: identical
-            srv.scheduler = make_scheduler(    # deterministic reps, min wall
-                policy, n_slots=srv.B, locale=srv.locale, cfg=cfg,
-                prompt_pad=args.prompt_pad)
-            for r in make_stream(cfg, args.requests, args.slots,
-                                 args.prompt_pad, args.sessions,
-                                 args.short_new, args.long_new, args.seed):
-                r.out, r.done, r.home = [], False, None
-                srv.submit(r)
-            t0 = time.perf_counter()
-            served = srv.run()
-            wall_us = min(wall_us, (time.perf_counter() - t0) * 1e6)
-        s = srv.scheduler.stats
-        outs[policy] = {r.rid: tuple(r.out) for r in served}
-        stats[policy] = s
-        tok_s = s.tokens_out / (wall_us / 1e6)
-        print(f"serve_{policy}_{tag},{wall_us / max(1, s.tokens_out):.0f},"
-              f"tok_s={tok_s:.0f};served={s.served};tokens={s.tokens_out};"
-              f"steps={s.steps:.0f};waves={s.waves};"
-              f"util={srv.scheduler.utilisation():.3f}")
-        print(f"serve_{policy}_{tag}_wait,,"
-              f"p50={s.wait_pct(50):.1f};p99={s.wait_pct(99):.1f}")
-        print(f"serve_{policy}_{tag}_relayout,,"
-              f"total={s.relayout_bytes};inter_pod={s.inter_pod_bytes};"
-              f"intra_pod={s.intra_pod_bytes};events={s.relayout_events}")
-    identical = outs["fifo"] == outs["homed"]
-    fewer = stats["homed"].relayout_bytes < stats["fifo"].relayout_bytes
-    no_slower = stats["homed"].steps <= stats["fifo"].steps
-    print(f"serve_check_{tag},,bit_identical={identical};"
-          f"relayout_homed_lt_fifo={fewer};steps_homed_le_fifo={no_slower}")
+        for lbl, mk in streams:
+            wall_us = float("inf")
+            for _ in range(max(1, args.reps)):  # best-of-reps: identical
+                srv.scheduler = make_scheduler(  # deterministic reps, min wall
+                    policy, n_slots=srv.B, locale=srv.locale, cfg=cfg,
+                    prompt_pad=args.prompt_pad)
+                for r in mk(cfg, args.requests, args.slots,
+                            args.prompt_pad, args.sessions,
+                            args.short_new, args.long_new, args.seed):
+                    r.out, r.done, r.home = [], False, None
+                    srv.submit(r)
+                t0 = time.perf_counter()
+                served = srv.run()
+                wall_us = min(wall_us, (time.perf_counter() - t0) * 1e6)
+            s = srv.scheduler.stats
+            outs[lbl][policy] = {r.rid: tuple(r.out) for r in served}
+            stats[lbl][policy] = s
+            name = f"serve_{policy}_{tag}{lbl}"
+            tok_s = s.tokens_out / (wall_us / 1e6)
+            print(f"{name},{wall_us / max(1, s.tokens_out):.0f},"
+                  f"tok_s={tok_s:.0f};served={s.served};"
+                  f"tokens={s.tokens_out};steps={s.steps:.0f};"
+                  f"waves={s.waves};"
+                  f"util={srv.scheduler.utilisation():.3f}")
+            print(f"{name}_wait,,"
+                  f"p50={s.wait_pct(50):.1f};p99={s.wait_pct(99):.1f}")
+            print(f"{name}_relayout,,"
+                  f"total={s.relayout_bytes};inter_pod={s.inter_pod_bytes};"
+                  f"intra_pod={s.intra_pod_bytes};"
+                  f"events={s.relayout_events};"
+                  f"affinity_hits={s.affinity_hits}")
+    for lbl, _ in streams:
+        o, st = outs[lbl], stats[lbl]
+        identical = o["fifo"] == o["homed"]
+        fewer = st["homed"].relayout_bytes < st["fifo"].relayout_bytes
+        no_slower = st["homed"].steps <= st["fifo"].steps
+        print(f"serve_check_{tag}{lbl},,bit_identical={identical};"
+              f"relayout_homed_lt_fifo={fewer};"
+              f"steps_homed_le_fifo={no_slower}")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,10 @@
 #
 # Runs `pytest -m "not slow"` and `launch/homecheck.py --workload all
 # --rules all` over a flat and a hierarchical emulated mesh (the analyzer
-# subprocesses set their own XLA_FLAGS), then stamps the combined verdict
+# subprocesses set their own XLA_FLAGS).  `--rules all` is R1-R11: each
+# sweep includes the R9 scheduler certificate over the full small-config
+# lattice and the R10/R11 (HBM live-range, collective control flow)
+# checks on every lowered workload.  It then stamps the combined verdict
 # (`"ci_gate": "pass"|"fail"`) into every record of every BENCH_*.json in
 # BENCH_DIR (default: repo root) alongside the existing "homecheck" key —
 # `benchmarks/compare.py` fails a PR whose baseline was "pass" but whose

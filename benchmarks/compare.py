@@ -19,7 +19,9 @@ but whose new record says ``"findings:N"`` (or ``"failed"``) fails the
 compare regardless of wall-clock — a locality regression is a regression
 even when it happens to be fast.  The ``"ci_gate"`` verdict stamped by
 ``benchmarks/ci_gate.sh`` (fast tests + the full R1-R8 analyzer sweep) is
-gated the same way: baseline ``"pass"`` -> new anything else fails.
+gated the same way: baseline ``"pass"`` -> new anything else fails, and so
+is the ``"schedcheck"`` R9 scheduler certificate on the serving families
+(baseline ``"certified"`` -> new ``"findings:N"`` fails).
 Records without a field (old baselines, runs without ``--check`` or the
 gate) are not gated.
 
@@ -46,8 +48,11 @@ def load(path: str) -> Dict[str, float]:
     return {r["name"]: r["us"] for r in records if r.get("us") is not None}
 
 
-#: verdict fields gated by the compare: field -> the passing value
-VERDICT_KEYS = {"homecheck": "clean", "ci_gate": "pass"}
+#: verdict fields gated by the compare: field -> the passing value.
+#: "schedcheck" is the R9 scheduler certificate run.py --check stamps on
+#: the serving families — a certified -> findings flip fails the compare.
+VERDICT_KEYS = {"homecheck": "clean", "ci_gate": "pass",
+                "schedcheck": "certified"}
 
 
 def load_checks(path: str, key: str = "homecheck") -> Dict[str, str]:

@@ -13,11 +13,13 @@ run in-process with their stdout captured so their CSV reaches
 ``--smoke`` runs every entry point at toy sizes on 2 placeholder devices —
 fast enough for the test suite, so the benchmark surface can't silently rot.
 
-``--check`` runs the homecheck static analyzer (rules R1-R8, see
+``--check`` runs the homecheck static analyzer (rules R1-R11, see
 `repro.analysis`) over each bench family *before* timing it and stamps the
 verdict (``"homecheck": "clean"`` / ``"findings:N"`` / ``"failed"``) into
-every record the family contributes to BENCH_*.json; ``compare.py`` then
-fails a PR whose previously clean case gained findings.
+every record the family contributes to BENCH_*.json; the serving families
+additionally get the R9 scheduler certificate as ``"schedcheck":
+"certified"`` / ``"findings:N"``.  ``compare.py`` then fails a PR whose
+previously clean (or certified) case gained findings.
 ``benchmarks/ci_gate.sh`` additionally stamps a ``"ci_gate"`` verdict
 (fast tests + the full analyzer sweep) gated the same way.
 
@@ -74,18 +76,18 @@ SMOKE_ARGS = {
     "bench_sort_sizes": ["--logns", "12"],
     "bench_striping": ["--logn", "14", "--logb", "6"],
     "bench_serve": ["--slots", "4", "--requests", "10", "--max-len", "32",
-                    "--short-new", "2", "--long-new", "6", "--sessions", "3",
+                    "--short-new", "2", "--long-new", "6", "--sessions", "6",
                     "--reps", "1"],
     "bench_serve_pods": ["--pods", "2x1", "--slots", "4", "--requests", "16",
                          "--max-len", "32", "--short-new", "2",
-                         "--long-new", "6", "--sessions", "3", "--reps", "1"],
+                         "--long-new", "6", "--sessions", "6", "--reps", "1"],
     "bench_kernels": ["--only", "local,merge", "--chunks", "2",
                       "--logcs", "8"],
 }
 
 # --check: homecheck CLI argv per bench family ("{D}" = device count).
 # Each entry lowers the family's workload/policy surface and runs rules
-# R1-R8 (repro.analysis) on the partitioned HLO + jaxpr + exchange network
+# R1-R11 (repro.analysis) on the partitioned HLO + jaxpr + exchange network
 # — nothing times until the home contract holds.  Families with no
 # collective surface of their own (striping/roofline are local-copy /
 # compile-only sweeps) map to an empty list.
@@ -113,16 +115,23 @@ CHECK_SUBST = {
 
 _CHECK_SUMMARY_RE = re.compile(
     r"homecheck: (\d+) target\(s\), (\d+) finding\(s\), (\d+) error\(s\)")
+_R9_OK_RE = re.compile(r"^R9 certificate \[scheduler\]:", re.M)
+_R9_BAD_RE = re.compile(r"^R9 certificate FAILED", re.M)
 
 
-def run_homecheck(key: str, smoke: bool, timeout: int = 600) -> str:
-    """Run the family's homecheck sweep; "clean" | "findings:N" | "failed".
+def run_homecheck(key: str, smoke: bool, timeout: int = 600):
+    """Run the family's homecheck sweep.
 
-    The CLI subprocess sets its own XLA_FLAGS from --pods, so the harness
-    process keeps its single real device (same discipline as the benches).
+    Returns ``(status, sched)``: status is "clean" | "findings:N" |
+    "failed"; sched is the R9 scheduler-certificate verdict ("certified"
+    | "findings:N") when the sweep printed one, else None (non-serve
+    families).  The CLI subprocess sets its own XLA_FLAGS from --pods, so
+    the harness process keeps its single real device (same discipline as
+    the benches).
     """
     subst = CHECK_SUBST[smoke]
     findings = 0
+    sched = None
     for argv in CHECK_ARGS.get(key, []):
         for k, v in subst.items():
             argv = [a.replace(k, v) for a in argv]
@@ -135,11 +144,17 @@ def run_homecheck(key: str, smoke: bool, timeout: int = 600) -> str:
         if r.returncode not in (0, 1) or m is None:
             print(f"# homecheck {key} DRIVER FAILURE:\n{r.stderr[-2000:]}",
                   file=sys.stderr)
-            return "failed"
+            return "failed", sched
         findings += int(m.group(2))
         if int(m.group(2)):
             sys.stdout.write(r.stdout)
-    return "clean" if findings == 0 else f"findings:{findings}"
+        n_bad = len(_R9_BAD_RE.findall(r.stdout))
+        if n_bad:
+            sched = f"findings:{n_bad}"
+        elif _R9_OK_RE.search(r.stdout) and sched is None:
+            sched = "certified"
+    status = "clean" if findings == 0 else f"findings:{findings}"
+    return status, sched
 
 
 # json targets: which CSV prefixes land in which BENCH_*.json
@@ -233,9 +248,10 @@ def main(argv=None) -> None:
     ap.add_argument("--skip-local", action="store_true",
                     help="skip the single-process (non-mesh) benches")
     ap.add_argument("--check", action="store_true",
-                    help="run homecheck (R1-R8) over each bench family "
+                    help="run homecheck (R1-R11) over each bench family "
                          "before timing it; the verdict is stamped into "
-                         "every BENCH_*.json record")
+                         "every BENCH_*.json record (serve families also "
+                         "get the R9 scheduler certificate)")
     args = ap.parse_args(argv)
     n_devices = 2 if args.smoke else 8
     records = []
@@ -244,14 +260,18 @@ def main(argv=None) -> None:
         """Homecheck the family before timing it; None when not checking."""
         if not args.check:
             return None
-        status = run_homecheck(key, smoke=args.smoke)
-        print(f"# homecheck[{key}]: {status}", flush=True)
-        return status
+        status, sched = run_homecheck(key, smoke=args.smoke)
+        tail = f", schedcheck: {sched}" if sched else ""
+        print(f"# homecheck[{key}]: {status}{tail}", flush=True)
+        return status, sched
 
-    def stamp(rows, status):
-        if status is not None:
+    def stamp(rows, verdicts):
+        if verdicts is not None:
+            status, sched = verdicts
             for r in rows:
                 r["homecheck"] = status
+                if sched is not None:
+                    r["schedcheck"] = sched
         return rows
 
     for key, mod, desc in MULTIDEV:

@@ -11,6 +11,11 @@ cache-home contract:
   R6 network-certification exchange network 0-1-certified as a sorter
   R7 index-arithmetic      merge-path ranks fit; BIG sentinel tie-stable
   R8 grid-dead-lane        no pl.when lane that never executes
+  R9 scheduler-certification  serving-scheduler invariants I1-I7 proved
+                           exhaustively over the small-config lattice
+  R10 hbm-live-range       peak live HBM bytes fit the per-device ceiling
+  R11 collective-control-flow  no collective under data-dependent control
+                           flow or with branch-inconsistent ordering
 
 Entry points: `Locale.check(...)` (repro.core.api), `check_workload` /
 `check_decode` / `check_artifacts` here, and the `launch/homecheck.py`
@@ -22,7 +27,10 @@ from repro.analysis.homecheck import (check_artifacts, check_decode,
                                       check_workload)
 from repro.analysis.netverify import (certify_supported_meshes,
                                       zero_one_certify)
+from repro.analysis.schedcheck import (DEFAULT_LATTICE, FAST_LATTICE,
+                                       certify_lattice)
 
 __all__ = ["Finding", "Report", "Severity", "RULES", "normalize_rules",
            "summarize", "check_artifacts", "check_decode", "check_workload",
-           "certify_supported_meshes", "zero_one_certify"]
+           "certify_supported_meshes", "zero_one_certify",
+           "DEFAULT_LATTICE", "FAST_LATTICE", "certify_lattice"]

@@ -1,7 +1,7 @@
 """Typed findings for the homecheck static locality analyzer.
 
 A `Finding` is one violation of the cache-home contract, tagged with the
-rule that produced it (R1-R4), a severity, the offending op, and the
+rule that produced it (R1-R11), a severity, the offending op, and the
 predicted-vs-actual byte counts where the rule is quantitative.  A `Report`
 bundles the findings of one analyzed program together with the context
 (workload, policy, mesh) they were produced under; ``report.clean`` is the
@@ -42,6 +42,17 @@ RULES = {
           "and tie-stable in the key dtype",
     "R8": "grid-dead-lane: pl.when predicates on program_id that no grid "
           "index satisfies (scheduled cores that never execute)",
+    "R9": "scheduler-certification: the serving scheduler's pure "
+          "transitions exhaustively certified (I1-I7: off-home moves "
+          "charged, starvation <= max_skip, work conservation, eviction "
+          "never migrates, no double-booking, charges == replayed moves, "
+          "minimal spill donor) over the small-config lattice",
+    "R10": "hbm-live-range: the compiled module's per-device peak live "
+           "HBM bytes exceed the declared ceiling "
+           "(repro.kernels.HBM_BYTES_PER_DEVICE)",
+    "R11": "collective-control-flow: a collective reachable only under "
+           "data-dependent control flow, or with inconsistent per-branch "
+           "ordering — deadlock once multi-process lands",
 }
 
 
@@ -63,7 +74,7 @@ def normalize_rules(rules) -> Tuple[str, ...]:
 
 @dataclass(frozen=True)
 class Finding:
-    rule: str                       # "R1".."R4"
+    rule: str                       # "R1".."R11"
     severity: Severity
     op: str                         # HLO opcode / primitive name
     shape: str = ""                 # offending value's type string

@@ -18,6 +18,26 @@ reuse them as regression anchors.
                              whole substage — still pairwise-complementary
                              (structurally clean), but the network no
                              longer sorts; only the 0-1 sweep catches it.
+  `mutant_scheduler`       — R9 ERROR: the production transitions with one
+                             named mutation switched on via the
+                             `SchedConfig.mutations` hook; each breaks
+                             exactly one certified invariant:
+                               "no_aging"     skip aging off  → I2
+                               "drop_charge"  charge dropped  → I1
+                               "greedy_spill" donor order ignored → I7
+  `hbm_hog_module`         — R10 ERROR (vs. a 32 MiB test ceiling): two
+                             16 MiB temporaries and the 16 MiB result all
+                             live at the ROOT — 64 MiB peak.
+  `branch_mismatch_module` — R11 ERROR: a `conditional` with an all-reduce
+                             in one branch only; devices disagreeing on
+                             the predicate deadlock under multi-process.
+  `data_dependent_loop_module`
+                           — R11 WARN: a `while` with no compiler-proven
+                             trip count whose body issues an all-reduce.
+  `consistent_branches_module`
+                           — R11 clean anchor: both branches carry the
+                             identical all-reduce, so the collective is
+                             control-independent and must NOT be flagged.
 """
 from __future__ import annotations
 
@@ -99,6 +119,128 @@ def nonbijective_network(m: int = 4):
     lv0 = net.levels[0]
     bad = dataclasses.replace(lv0, perm=tuple((s, 0) for s, _ in lv0.perm))
     return dataclasses.replace(net, levels=(bad,) + net.levels[1:])
+
+
+#: the invariant each scheduler mutation provably violates (the R9 tests
+#: assert the witness carries exactly this tag)
+MUTANT_INVARIANT = {
+    "no_aging": "I2-starvation",
+    "drop_charge": "I1-uncharged-move",
+    "greedy_spill": "I7-spill-order",
+}
+
+#: smallest DEFAULT_LATTICE entry on which each mutation is caught — the
+#: witness search stops at the first violation, so these certify fast
+_MUTANT_ENTRY = {
+    "no_aging": "homed-1x2",
+    "drop_charge": "homed-2x1",
+    "greedy_spill": "homed-2x1",
+}
+
+
+def mutant_scheduler(mutation: str):
+    """A `LatticeEntry` running the production scheduler transitions with
+    one named mutation enabled — `schedcheck.certify` must return a
+    minimal witness tagged `MUTANT_INVARIANT[mutation]` for it."""
+    from repro.analysis.schedcheck import DEFAULT_LATTICE
+    if mutation not in MUTANT_INVARIANT:
+        raise ValueError(f"unknown scheduler mutation {mutation!r}; "
+                         f"known: {', '.join(MUTANT_INVARIANT)}")
+    entry = next(e for e in DEFAULT_LATTICE
+                 if e.name == _MUTANT_ENTRY[mutation])
+    return dataclasses.replace(
+        entry, name=f"{entry.name}+{mutation}",
+        cfg=dataclasses.replace(entry.cfg,
+                                mutations=frozenset({mutation})))
+
+
+def hbm_hog_module() -> str:
+    """HLO whose entry holds 64 MiB live at the ROOT (R10 vs 32 MiB)."""
+    return """\
+HloModule r10_hbm_hog
+
+ENTRY %main (x: f32[4194304]) -> f32[4194304] {
+  %x = f32[4194304]{0} parameter(0)
+  %a = f32[4194304]{0} negate(%x)
+  %b = f32[4194304]{0} exponential(%x)
+  ROOT %r = f32[4194304]{0} add(%a, %b)
+}
+"""
+
+
+def branch_mismatch_module() -> str:
+    """HLO with a conditional whose branches disagree on collectives."""
+    return """\
+HloModule r11_branch_mismatch
+
+%with_ar (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8]{0} parameter(0)
+  ROOT %ar = f32[8]{0} all-reduce(%p0), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+}
+
+%without_ar (p1: f32[8]) -> f32[8] {
+  %p1 = f32[8]{0} parameter(0)
+  ROOT %neg = f32[8]{0} negate(%p1)
+}
+
+ENTRY %main (x: f32[8], p: pred[]) -> f32[8] {
+  %x = f32[8]{0} parameter(0)
+  %p = pred[] parameter(1)
+  ROOT %cond = f32[8]{0} conditional(%p, %x, %x), true_computation=%with_ar, false_computation=%without_ar
+}
+"""
+
+
+def data_dependent_loop_module() -> str:
+    """HLO with a trip-count-unknown while whose body all-reduces."""
+    return """\
+HloModule r11_data_dependent_loop
+
+%loop_cond (pc: (s32[], f32[8])) -> pred[] {
+  %pc = (s32[], f32[8]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%pc), index=0
+  %j = s32[] get-tuple-element(%pc), index=0
+  ROOT %lt = pred[] compare(%i, %j), direction=LT
+}
+
+%loop_body (pb: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %pb = (s32[], f32[8]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%pb), index=0
+  %v = f32[8]{0} get-tuple-element(%pb), index=1
+  %ar = f32[8]{0} all-reduce(%v), replica_groups={{0,1}}, to_apply=%add
+  ROOT %t = (s32[], f32[8]{0}) tuple(%i, %ar)
+}
+
+ENTRY %main (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]{0}) parameter(0)
+  ROOT %w = (s32[], f32[8]{0}) while(%p), condition=%loop_cond, body=%loop_body
+}
+"""
+
+
+def consistent_branches_module() -> str:
+    """HLO with a conditional whose branches issue the same all-reduce —
+    control-independent, must stay clean under R11."""
+    return """\
+HloModule r11_consistent_branches
+
+%br_a (pa: f32[8]) -> f32[8] {
+  %pa = f32[8]{0} parameter(0)
+  ROOT %ar = f32[8]{0} all-reduce(%pa), replica_groups={{0,1}}, to_apply=%add
+}
+
+%br_b (pb: f32[8]) -> f32[8] {
+  %pb = f32[8]{0} parameter(0)
+  %neg = f32[8]{0} negate(%pb)
+  ROOT %ar2 = f32[8]{0} all-reduce(%neg), replica_groups={{0,1}}, to_apply=%add
+}
+
+ENTRY %main (x: f32[8], p: pred[]) -> f32[8] {
+  %x = f32[8]{0} parameter(0)
+  %p = pred[] parameter(1)
+  ROOT %cond = f32[8]{0} conditional(%p, %x, %x), true_computation=%br_a, false_computation=%br_b
+}
+"""
 
 
 def inverted_keep_network(m: int = 4):

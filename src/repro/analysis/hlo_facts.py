@@ -1,21 +1,33 @@
-"""Module-header facts of a partitioned HLO program.
+"""Module-header and buffer-liveness facts of a partitioned HLO program.
 
-The rules need two facts the op-level parser (`launch.hlo_cost`) doesn't
-extract: the entry computation's parameter/result types and the
-input→output donation aliases.  Both live on the `HloModule` header line:
+The rules need facts the op-level parser (`launch.hlo_cost`) doesn't
+extract: the entry computation's parameter/result types, the input→output
+donation aliases, and (for R10) a linear-scan liveness estimate of peak
+live HBM bytes.  The header facts live on the `HloModule` header line:
 
   HloModule jit_f, entry_computation_layout={(s32[512]{0})->s32[512]{0}},
       input_output_alias={ {}: (0, {}, may-alias) }, ...
 
 Types may be tuples whose member layouts contain parens/braces
 (`f32[8,16]{1,0:T(8,128)}`), so splitting is depth-tracked, not regex.
+
+The liveness scan (`liveness`) walks the entry computation's ops in program
+order, opening a buffer at each defining op and closing it after its last
+top-level use; parameters stay live for the whole call (XLA keeps argument
+buffers resident), and the ROOT's feeding values stay live to the end.
+Pure shape-aliasing ops (tuple / get-tuple-element / bitcast / constant)
+allocate nothing.  Fusion and while internals are not descended into —
+their scratch is `temp` in XLA's own accounting and is covered when the
+caller passes `compiled.memory_analysis()` figures alongside; the scan is
+an order-of-magnitude floor, deliberately conservative in the *over*
+direction for donated buffers (both sides of an alias are counted).
 """
 from __future__ import annotations
 
 import re
-from typing import List, Set, Tuple
+from typing import Dict, List, Set, Tuple
 
-from repro.launch.hlo_cost import _parse_shape, _shape_bytes
+from repro.launch.hlo_cost import (_parse_shape, _shape_bytes, parse_module)
 
 _ALIAS_RE = re.compile(r"input_output_alias=\{(.*?)\}(?:,|\s|$)")
 _ALIAS_ENTRY_RE = re.compile(r"\{[\d,\s]*\}:\s*\((\d+)")
@@ -88,6 +100,79 @@ def aliased_param_indices(text: str) -> Set[int]:
         return set()
     region = _balanced(text, m.end() - 1)
     return {int(i) for i in _ALIAS_ENTRY_RE.findall(region)}
+
+
+# Ops that reuse (or trivially materialize) existing storage: no new HBM
+# buffer is opened for them in the liveness scan.
+_ALIAS_OPCODES = {"tuple", "get-tuple-element", "bitcast", "constant",
+                  "after-all", "partition-id", "replica-id", "copy-done",
+                  "all-reduce-done", "all-gather-done"}
+
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _value_operands(op, shapes: Dict[str, str]) -> List[str]:
+    """Names of same-computation values an op line consumes.
+
+    Scans every `%name` after the opcode's open paren and keeps the ones
+    defined in this computation — computation references (`calls=%fc`,
+    `body=%b`) are filtered out because they are not in the value table.
+    """
+    parts = op.line.split(op.opcode + "(", 1)
+    if len(parts) < 2:
+        return []
+    return [n for n in _NAME_RE.findall(parts[1]) if n in shapes]
+
+
+def liveness(text: str) -> Dict:
+    """Linear-scan peak-live-bytes estimate over the entry computation.
+
+    Returns {"peak_bytes", "peak_index", "param_bytes", "n_buffers",
+    "live_at_peak": [(bytes, name, opcode), ...] (largest first, capped)}.
+    """
+    entry = parse_module(text)["__entry__"]
+    ops = entry.ops
+    n = len(ops)
+    last_use: Dict[str, int] = {}
+    for i, op in enumerate(ops):
+        for name in _value_operands(op, entry.shapes):
+            last_use[name] = i
+    root_i = next((i for i, op in enumerate(ops) if "ROOT" in op.line), n - 1)
+
+    # (start, end, bytes, name, opcode); end is the last index the buffer
+    # is live at (inclusive).
+    records: List[Tuple[int, int, float, str, str]] = []
+    param_bytes = 0.0
+    for i, op in enumerate(ops):
+        if op.opcode in _ALIAS_OPCODES:
+            continue
+        b = _shape_bytes(op.result)
+        if b <= 0:
+            continue
+        if op.opcode == "parameter":
+            records.append((0, n - 1, b, op.name, op.opcode))
+            param_bytes += b
+            continue
+        end = last_use.get(op.name, i)
+        if i == root_i or last_use.get(op.name, -1) >= root_i:
+            end = n - 1                       # feeds the result: live to end
+        records.append((i, end, b, op.name, op.opcode))
+
+    delta = [0.0] * (n + 1)
+    for start, end, b, _, _ in records:
+        delta[start] += b
+        delta[end + 1] -= b
+    peak, peak_i, run = 0.0, 0, 0.0
+    for i in range(n):
+        run += delta[i]
+        if run > peak:
+            peak, peak_i = run, i
+    at_peak = sorted(
+        ((b, name, opcode) for start, end, b, name, opcode in records
+         if start <= peak_i <= end), reverse=True)
+    return {"peak_bytes": peak, "peak_index": peak_i,
+            "param_bytes": param_bytes, "n_buffers": len(records),
+            "live_at_peak": at_peak[:8]}
 
 
 def type_key(type_str: str) -> Tuple[Tuple[str, Tuple[int, ...]], ...]:

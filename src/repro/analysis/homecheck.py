@@ -1,4 +1,4 @@
-"""The homecheck orchestrator: trace, lower, extract facts, run R1-R8.
+"""The homecheck orchestrator: trace, lower, extract facts, run R1-R11.
 
 `check_workload` takes a `Locale` plus a registered workload name, builds
 the jitted entry point exactly as a caller would (`Locale.workload`),
@@ -10,7 +10,9 @@ static, so locality bugs surface at compile time, not in BENCH diffs.
 
 `rules` filters which rules run (None/'all' = every rule); R1/R2 need HLO
 facts, R3/R5/R7/R8 the jaxpr, R6 the (policy, mesh-slice) the shard_map
-engine was built for.
+engine was built for, R9 a scheduler lattice (only the serving target has
+one — other targets note the skip), R10/R11 just the compiled HLO (R10
+additionally takes `compiled.memory_analysis()` when the caller has it).
 
 Budget notes (R1):
 
@@ -52,6 +54,9 @@ def check_artifacts(target: str, hlo_text: str, *,
                     vmem_ceiling: Optional[int] = None,
                     donation_min_bytes: float = R4_MIN_BYTES,
                     network=None,
+                    sched_lattice=None,
+                    hbm_ceiling: Optional[int] = None,
+                    memory_stats=None,
                     context: Optional[Dict] = None,
                     rules=None,
                     suppress: Sequence[str] = ()) -> Report:
@@ -59,9 +64,14 @@ def check_artifacts(target: str, hlo_text: str, *,
 
     `predicted=None` skips R1 (no analytic budget); `mesh=None` skips R2;
     `jaxpr=None` skips R3/R5/R7/R8; `network=None` (else a
-    `(policy, sizes, axes)` triple for the shard_map engine) skips R6.
+    `(policy, sizes, axes)` triple for the shard_map engine) skips R6;
+    `sched_lattice=None` skips R9 (else a sequence of
+    `schedcheck.LatticeEntry`); R10 gates peak live bytes against
+    `hbm_ceiling` (default `repro.kernels.HBM_BYTES_PER_DEVICE`), taking
+    XLA's own `compiled.memory_analysis()` figures when passed as
+    `memory_stats`; R11 needs only the HLO text.
     """
-    from repro.kernels import VMEM_BYTES_PER_CORE
+    from repro.kernels import HBM_BYTES_PER_DEVICE, VMEM_BYTES_PER_CORE
     from repro.launch.hlo_cost import analyze
 
     active = set(normalize_rules(rules))
@@ -103,6 +113,21 @@ def check_artifacts(target: str, hlo_text: str, *,
         else:
             report.notes.append("R6 skipped: target has no exchange "
                                 "network (not the shard_map engine)")
+    if "R9" in active:
+        if sched_lattice is not None:
+            from repro.analysis.schedcheck import r9_scheduler_certification
+            r9_scheduler_certification(report, sched_lattice)
+        else:
+            report.notes.append("R9 skipped: target has no serving "
+                                "scheduler (serve[decode] only)")
+    if "R10" in active:
+        from repro.analysis.livecheck import r10_hbm_live_range
+        r10_hbm_live_range(report, hlo_text,
+                           hbm_ceiling or HBM_BYTES_PER_DEVICE,
+                           memory_stats=memory_stats)
+    if "R11" in active:
+        from repro.analysis.livecheck import r11_collective_control_flow
+        r11_collective_control_flow(report, hlo_text)
     return report.suppress(suppress)
 
 
@@ -116,6 +141,7 @@ def check_workload(locale, workload: str = "sort", *,
                    local_phase: Optional[str] = None,
                    logn: int = 12, reps: int = 4,
                    vmem_ceiling: Optional[int] = None,
+                   hbm_ceiling: Optional[int] = None,
                    rules=None,
                    suppress: Sequence[str] = ()) -> Report:
     """Statically check one registered workload under `locale`.
@@ -188,18 +214,31 @@ def check_workload(locale, workload: str = "sort", *,
 
     dtype = jnp.float32 if workload == "microbench" else jnp.int32
     x = jnp.arange(n, dtype=jnp.int32).astype(dtype)
-    hlo = fn.lower(x).compile().as_text()
+    compiled = fn.lower(x).compile()
+    hlo = compiled.as_text()
     traceable = getattr(fn, "__wrapped__", fn)
     jaxpr = jax.make_jaxpr(traceable)(x)
     return check_artifacts(target, hlo, jaxpr=jaxpr, predicted=predicted,
                            mesh=mesh, allowed_axes=axes,
                            vmem_ceiling=vmem_ceiling, network=network,
+                           hbm_ceiling=hbm_ceiling,
+                           memory_stats=_memory_stats(compiled),
                            context=context, rules=rules, suppress=suppress)
+
+
+def _memory_stats(compiled):
+    """`compiled.memory_analysis()`, None where the backend lacks it."""
+    try:
+        return compiled.memory_analysis()
+    except Exception:
+        return None
 
 
 def check_decode(mesh=None, *, cfg_name: str = "qwen3-0.6b",
                  batch_slots: int = 4, max_len: int = 64,
                  prompt_len: int = 8,
+                 hbm_ceiling: Optional[int] = None,
+                 sched_lattice=None,
                  rules=None,
                  suppress: Sequence[str] = ()) -> Report:
     """Statically check the serving decode step (the `DecodeServer` jit).
@@ -209,6 +248,10 @@ def check_decode(mesh=None, *, cfg_name: str = "qwen3-0.6b",
     runs), and lowers one decode step.  R2's declared axes are the plan's
     batch axes (slot homing) plus "model" (tensor parallelism) — any
     collective spanning another axis reshards homed cache state.
+
+    R9 certifies the scheduler over `sched_lattice` (default the cheap
+    `schedcheck.FAST_LATTICE` corner; the CLI runs the full
+    `DEFAULT_LATTICE` once per invocation and prints the certificate).
     """
     import jax
     import jax.numpy as jnp
@@ -234,12 +277,19 @@ def check_decode(mesh=None, *, cfg_name: str = "qwen3-0.6b",
         params, toks)
     batch = {"tokens": jax.ShapeDtypeStruct((batch_slots, 1), jnp.int32)}
     args = (params, caches, batch, jnp.int32(prompt_len))
-    hlo = srv._decode.lower(*args).compile().as_text()
+    compiled = srv._decode.lower(*args).compile()
+    hlo = compiled.as_text()
     jaxpr = jax.make_jaxpr(srv._decode)(*args)
     allowed = tuple(plan.batch_axes or ()) + ("model",)
+    if sched_lattice is None:
+        from repro.analysis.schedcheck import FAST_LATTICE
+        sched_lattice = FAST_LATTICE
     context = dict(workload="serve", cfg=cfg_name, batch_slots=batch_slots,
                    max_len=max_len,
                    mesh=dict(zip(*_mesh_axes(mesh))) if mesh else None)
     return check_artifacts("serve[decode]", hlo, jaxpr=jaxpr,
                            predicted=None, mesh=mesh, allowed_axes=allowed,
+                           sched_lattice=sched_lattice,
+                           hbm_ceiling=hbm_ceiling,
+                           memory_stats=_memory_stats(compiled),
                            context=context, rules=rules, suppress=suppress)

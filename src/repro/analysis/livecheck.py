@@ -1,0 +1,193 @@
+"""R10/R11: compiled-module memory and control-flow rules.
+
+Two rules over the optimized (post-SPMD) HLO of a lowered workload — the
+compiled artifact, not the source program:
+
+  R10 hbm-live-range          Gate the per-device peak live HBM bytes
+                              against a declared ceiling.  The peak is the
+                              max of (a) the text-level linear-scan
+                              liveness of `hlo_facts.liveness` and (b) the
+                              authoritative XLA figures when the caller
+                              passes `compiled.memory_analysis()` —
+                              argument + output + temp − aliased.  On
+                              success the finding is a note that also
+                              reports the headroom, which is exactly the
+                              budget the KV prefix pools of the serving
+                              scheduler can grow into.
+
+  R11 collective-control-flow Flag collectives whose execution depends on
+                              data-dependent control flow.  A `conditional`
+                              whose branches carry *different* collective
+                              sequences (kind + payload bytes, recursively
+                              through the call graph) is an ERROR: under
+                              today's single-controller emulation every
+                              device takes the same branch so it is benign,
+                              but the moment the ROADMAP's multi-process
+                              item lands, devices disagreeing on the branch
+                              deadlock on the first mismatched collective.
+                              A `while` loop without a compiler-proven
+                              `known_trip_count` that contains collectives
+                              is a WARN for the same reason: the loop count
+                              itself becomes data the processes must agree
+                              on.  Identical sequences on every branch are
+                              fine — the collective happens either way.
+
+Both rules parse with `launch.hlo_cost.parse_module`; neither needs the
+jaxpr or the exchange schedule, so they run on any HLO text (including the
+committed known-bad fixtures in `analysis.fixtures`).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.findings import Finding, Report, Severity
+from repro.analysis.hlo_facts import liveness
+from repro.launch.hlo_cost import (_BRANCH_RE, _CALLS_RE, _COND_BODY_RE,
+                                   _TO_APPLY_RE, _dedupe_async, _shape_bytes,
+                                   parse_module)
+
+_TRUE_FALSE_RE = re.compile(
+    r"true_computation=%?([\w.\-]+),\s*false_computation=%?([\w.\-]+)")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _mem_stats_peak(memory_stats) -> Optional[float]:
+    """argument + output + temp − aliased, from a dict or a
+    `compiled.memory_analysis()` object; None when unavailable."""
+    if memory_stats is None:
+        return None
+
+    def get(key: str) -> Optional[float]:
+        if isinstance(memory_stats, dict):
+            v = memory_stats.get(key, memory_stats.get(key + "_size_in_bytes"))
+        else:
+            v = getattr(memory_stats, key + "_size_in_bytes", None)
+        return float(v) if v is not None else None
+
+    arg, out, temp = get("argument"), get("output"), get("temp")
+    if arg is None and out is None and temp is None:
+        return None
+    alias = get("alias") or 0.0
+    return (arg or 0.0) + (out or 0.0) + (temp or 0.0) - alias
+
+
+def r10_hbm_live_range(report: Report, hlo_text: str, ceiling: float,
+                       memory_stats=None) -> None:
+    """Gate peak live HBM bytes of the compiled module against `ceiling`."""
+    live = liveness(hlo_text)
+    scan_peak = live["peak_bytes"]
+    stats_peak = _mem_stats_peak(memory_stats)
+    peak = max(scan_peak, stats_peak or 0.0)
+    source = ("xla memory_analysis" if stats_peak is not None
+              and stats_peak >= scan_peak else "liveness scan")
+    if peak > ceiling:
+        top = ", ".join(f"{name}:{opcode}={b:,.0f}B"
+                        for b, name, opcode in live["live_at_peak"][:4])
+        report.add(Finding(
+            rule="R10", severity=Severity.ERROR, op="module",
+            predicted_bytes=ceiling, actual_bytes=peak,
+            message=f"peak live HBM {peak:,.0f}B exceeds the "
+                    f"{ceiling:,.0f}B per-device ceiling ({source}; "
+                    f"largest at peak: {top})"))
+        return
+    headroom = ceiling - peak
+    report.notes.append(
+        f"R10: hbm-live-range ok — peak {peak:,.0f}B of {ceiling:,.0f}B "
+        f"ceiling ({source}; {headroom:,.0f}B headroom for KV pools, "
+        f"{live['n_buffers']} buffers scanned)")
+
+
+def _callees(op) -> List[str]:
+    """Computation names an op transfers control to (all kinds)."""
+    names: List[str] = []
+    if op.opcode == "while":
+        m = _COND_BODY_RE.search(op.line)
+        if m:
+            names.append(m.group(2))
+    elif op.opcode == "conditional":
+        m = _BRANCH_RE.search(op.line)
+        if m:
+            names.extend(_NAME_RE.findall(m.group(1)))
+        else:
+            m = _TRUE_FALSE_RE.search(op.line)
+            if m:
+                names.extend([m.group(1), m.group(2)])
+    else:
+        m = _TO_APPLY_RE.search(op.line) or _CALLS_RE.search(op.line)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def collective_signature(comps: Dict, name: str,
+                         depth: int = 0) -> Tuple[Tuple[str, int], ...]:
+    """Ordered (kind, payload bytes) sequence of every collective reachable
+    from computation `name`, recursing through whiles/calls/fusions and —
+    for nested conditionals — through every branch (a nested mismatch is
+    caught when that conditional is itself visited)."""
+    comp = comps.get(name)
+    if comp is None or depth > 50:
+        return ()
+    sig: List[Tuple[str, int]] = []
+    for op in comp.ops:
+        kind = _dedupe_async(op)
+        if kind:
+            sig.append((kind, int(_shape_bytes(op.result))))
+        for callee in _callees(op):
+            sig.extend(collective_signature(comps, callee, depth + 1))
+    return tuple(sig)
+
+
+def _branch_names(op) -> List[str]:
+    m = _BRANCH_RE.search(op.line)
+    if m:
+        return _NAME_RE.findall(m.group(1))
+    m = _TRUE_FALSE_RE.search(op.line)
+    return [m.group(1), m.group(2)] if m else []
+
+
+def r11_collective_control_flow(report: Report, hlo_text: str) -> None:
+    """Flag collectives under data-dependent control flow."""
+    comps = parse_module(hlo_text)
+    n_cond = n_while = 0
+    for cname, comp in comps.items():
+        if cname == "__entry__":        # alias of the entry computation
+            continue
+        for op in comp.ops:
+            if op.opcode == "conditional":
+                n_cond += 1
+                branches = _branch_names(op)
+                sigs = [collective_signature(comps, b) for b in branches]
+                if sigs and any(s != sigs[0] for s in sigs[1:]):
+                    detail = "; ".join(
+                        f"branch {i} [{b}]: "
+                        + (", ".join(f"{k}:{by:,d}B" for k, by in s) or "none")
+                        for i, (b, s) in enumerate(zip(branches, sigs)))
+                    report.add(Finding(
+                        rule="R11", severity=Severity.ERROR, op="conditional",
+                        shape=op.result,
+                        message=f"collective sequences differ across "
+                                f"branches of %{op.name} in %{cname} — "
+                                f"devices disagreeing on the predicate "
+                                f"deadlock under multi-process ({detail})"))
+            elif op.opcode == "while":
+                n_while += 1
+                m = _COND_BODY_RE.search(op.line)
+                if m and "known_trip_count" not in op.line:
+                    body_sig = collective_signature(comps, m.group(2))
+                    if body_sig:
+                        kinds = ", ".join(sorted({k for k, _ in body_sig}))
+                        report.add(Finding(
+                            rule="R11", severity=Severity.WARN, op="while",
+                            shape=op.result,
+                            message=f"%{op.name} in %{cname} has no "
+                                    f"compiler-proven trip count but its "
+                                    f"body issues collectives ({kinds}) — "
+                                    f"the iteration count is data the "
+                                    f"processes must agree on"))
+    if not any(f.rule == "R11" for f in report.findings):
+        report.notes.append(
+            f"R11: collective-control-flow ok — {n_cond} conditional(s) and "
+            f"{n_while} while loop(s) scanned, every reachable collective "
+            f"is control-independent")

@@ -24,7 +24,9 @@ every rule from them.
 
 R5/R7/R8 (pallas block schedules and kernel jaxprs) live in
 `analysis.kernelcheck`; R6 (exchange-network certification) in
-`analysis.netverify`.  The orchestrator runs all eight.
+`analysis.netverify`; R9 (scheduler certification) in
+`analysis.schedcheck`; R10/R11 (HBM live range, collective control flow)
+in `analysis.livecheck`.  The orchestrator runs all eleven.
 """
 from __future__ import annotations
 

@@ -1,0 +1,537 @@
+"""Rule R9: exhaustively certify the home-aware scheduler's invariants.
+
+The serving scheduler is the runtime's *placement authority*: every decode
+request lands where it says, every cache byte moves when it says.  PR 7's
+`zero_one_certify` proved the exchange network by running the descriptor
+the runtime executes over its entire input space; this module does the
+same for the scheduler — `runtime.scheduler` now exposes routing, wave
+formation, spill and eviction as pure transition functions
+(`route_t`/`form_wave_t`/`complete_t`: state in, ``(state', placements,
+charges)`` out), so the checker explores **all interleavings of arrivals
+and wave boundaries** over a small-config lattice by breadth-first search
+on canonicalized states, checking at every wave transition:
+
+I1 off-home-unless-charged
+    a placement landing off its session's bound home carries a `Charge`
+    (or reuses a cache copy already charged this wave) — no silent moves,
+    the "invisible coherence traffic" failure mode.
+I2 starvation bound
+    no queued entry is ever skipped more than ``max_skip`` waves — the
+    aging floor provably forces an aged entry's span into the target.
+I3 work conservation
+    a formed wave never leaves a free slot while an admissible entry
+    (span <= target) waits in any queue the config can see.
+I4 eviction-never-migrates + capacity
+    a binding leaves the table only by eviction on its own home; no home
+    ever holds more than ``session_capacity`` bindings.
+I5 no double-booking / binding leak
+    slots and requests are placed at most once, placements come from the
+    queues, fills are front-first, and in-flight fork marks are consumed
+    by the wave that made them.
+I6 charges equal the replayed moves
+    an *independent* accounting model replays the placements in decision
+    order against the pre-wave binding table; the transition's charges —
+    bytes, inter/intra-pod split, fork-vs-migrate — must match move for
+    move, and the post-state bindings must equal the model's.
+I7 spill donor minimality
+    every spilled placement picked the donor the cost order
+    ``(relayout cost, crosses pod, -queue depth, donor, index)`` ranks
+    first — spills pay the cheapest relayout the queues offered.
+
+States are canonicalized (request ids relabelled in queue order, sessions
+by first appearance, ``last_used`` timestamps by dense LRU rank) so the
+search closes over a finite lattice; BFS order makes the first violation
+a *minimal witness* — the shortest arrival/wave script reaching it, which
+`Witness.format()` prints as a replayable trace.  The committed mutants in
+`analysis.fixtures` (aging off, charge dropped, greedy spill) each produce
+such a witness; the production config produces none, and the CLI prints
+the certificate (`certify_lattice`) next to R6's.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding, Report, Severity
+from repro.runtime.scheduler import (Charge, ReqInfo, SchedConfig,
+                                     SchedState, Served, complete_t,
+                                     form_wave_t, initial_state, route_t)
+
+#: exploration is exhaustive; refuse lattices whose closure outgrows this
+MAX_STATES = 200_000
+
+
+@dataclass(frozen=True)
+class LatticeEntry:
+    """One certified configuration plus the arrival space explored on it."""
+    name: str
+    cfg: SchedConfig
+    max_arrivals: int = 5
+    spans: Tuple[int, ...] = (1, 2)
+    max_sessions: int = 2
+
+
+@dataclass(frozen=True)
+class Witness:
+    """A minimal violating run: the event script and what broke."""
+    config: str
+    invariant: str
+    events: Tuple[str, ...]
+    violation: str
+
+    def format(self) -> str:
+        script = " -> ".join(self.events) if self.events else "(initial)"
+        return (f"{self.config}: {self.invariant} after [{script}]: "
+                f"{self.violation}")
+
+
+class _Violation(Exception):
+    def __init__(self, invariant: str, message: str):
+        super().__init__(message)
+        self.invariant = invariant
+
+
+# ---------------------------------------------------------------------------
+# canonicalization: close the search over relabelled-isomorphic states
+# ---------------------------------------------------------------------------
+def _canonical_key(state: SchedState, arrivals_left: int) -> Tuple:
+    sess_map: Dict[object, int] = {}
+
+    def sess(s):
+        if s is None:
+            return None
+        if s not in sess_map:
+            sess_map[s] = len(sess_map)
+        return sess_map[s]
+
+    # bindings first: their order is LRU-tie-breaking insertion order
+    ranks = {t: i for i, t in
+             enumerate(sorted({b.last_used for b in state.bindings}))}
+    binds = tuple((sess(b.session), b.home, b.tokens, ranks[b.last_used])
+                  for b in state.bindings)
+    fifo = tuple((e.span, sess(e.session)) for e in state.fifo)
+    queues = tuple((h, tuple((e.req.span, sess(e.req.session), e.skips)
+                             for e in q))
+                   for h, q in state.queues)
+    return (binds, fifo, queues, bool(state.forked), arrivals_left)
+
+
+# ---------------------------------------------------------------------------
+# the independent accounting model (invariants I1, I6, I7, parts of I5)
+# ---------------------------------------------------------------------------
+def _audit_wave(cfg: SchedConfig, pre: SchedState, post: SchedState,
+                placements, charges) -> None:
+    """Replay the wave's placements in decision order against the pre-wave
+    tables and demand the transition's charges and post-state match."""
+    slots_of = cfg.slots_of
+    # I5: slots/requests at most once, slot owned by the placement's home
+    slots = [p.slot for p in placements]
+    if len(set(slots)) != len(slots):
+        raise _Violation("I5-double-booking",
+                         f"slot placed twice: {sorted(slots)}")
+    rids = [p.rid for p in placements]
+    if len(set(rids)) != len(rids):
+        raise _Violation("I5-double-booking",
+                         f"request placed twice: {rids}")
+    for p in placements:
+        if cfg.owners[p.slot] != p.home:
+            raise _Violation("I5-double-booking",
+                             f"slot {p.slot} owned by "
+                             f"{cfg.owners[p.slot]}, placed for {p.home}")
+
+    if cfg.policy == "fifo":
+        want = [e.rid for e in pre.fifo[:cfg.n_slots]]
+        if rids != want:
+            raise _Violation("I5-double-booking",
+                             f"fifo wave {rids} is not the queue prefix "
+                             f"{want}")
+    else:
+        # fill placements on each home must be the front-first admissible
+        # prefix of that home's own pre-wave queue (spills exempt)
+        for h in cfg.homes:
+            fills = [p.rid for p in placements
+                     if p.home == h and p.spilled_from is None]
+            q = [e.req for e in pre.queue(h)[:cfg.lookahead]]
+            admissible = [r.rid for r in q if r.span <= charges.target]
+            if fills != admissible[:len(fills)]:
+                raise _Violation(
+                    "I5-double-booking",
+                    f"home {h} fill {fills} is not the front-first "
+                    f"admissible prefix {admissible[:len(fills)]}")
+
+    # replay: model queues (entries removed as placed), bindings, sites
+    queues = {h: [e.req for e in q] for h, q in pre.queues}
+    bindings = {b.session: b for b in pre.bindings}
+    sites: Dict[object, set] = {}
+    forked = set(pre.forked)
+    moves: List[Charge] = []
+    info = {e.req.rid: e.req for _, q in pre.queues for e in q}
+    info.update({e.rid: e for e in pre.fifo})
+    for p in placements:
+        req = info.get(p.rid)
+        if req is None:
+            raise _Violation("I5-binding-leak",
+                             f"placement of rid {p.rid} not found in any "
+                             f"pre-wave queue")
+        if cfg.policy == "homed":
+            src_q = queues[p.home if p.spilled_from is None
+                           else p.spilled_from]
+            src_q.remove(req)
+        b = bindings.get(req.session) if req.session is not None else None
+        if b is None:
+            continue
+        # fork iff the session still has work queued at its bound home
+        migrate = not (b.home != p.home and b.home in queues
+                       and any(r.session == req.session
+                               for r in queues[b.home]))
+        ss = sites.setdefault(req.session, {b.home})
+        if p.home not in ss and p.home != b.home:
+            # off-home landing without a cache copy charged onto this
+            # home earlier in the wave: a Charge is owed (I1), and the
+            # move-for-move comparison below enforces it
+            moves.append(Charge(
+                rid=p.rid, session=req.session, src=b.home, dst=p.home,
+                tokens=b.tokens, nbytes=b.tokens * cfg.bytes_per_token,
+                inter_pod=cfg.pod(b.home) != cfg.pod(p.home),
+                migrate=migrate))
+        ss.add(p.home)
+        if migrate:
+            bindings[req.session] = b._replace(home=p.home)
+        elif p.home != b.home:
+            forked.add(p.rid)
+
+    if tuple(moves) != charges.moves:
+        # distinguish the silent-move class from a mere accounting skew
+        charged = {(c.session, c.dst) for c in charges.moves}
+        missing = [c for c in moves if (c.session, c.dst) not in charged]
+        inv = "I1-uncharged-move" if missing else "I6-charge-mismatch"
+        raise _Violation(
+            inv, f"transition charged {list(charges.moves)}, independent "
+                 f"replay expects {moves}")
+    if {b.session: b.home for b in post.bindings} != \
+            {s: b.home for s, b in bindings.items()}:
+        raise _Violation(
+            "I6-charge-mismatch",
+            f"post-wave binding homes "
+            f"{{ {', '.join(f'{b.session}:{b.home}' for b in post.bindings)} }}"
+            f" diverge from the replayed fork/migrate model")
+    if post.forked != frozenset(forked):
+        raise _Violation("I5-binding-leak",
+                         f"fork marks {set(post.forked)} != replayed "
+                         f"{forked}")
+
+    # I7: every spill picked the minimal-cost donor available at its turn
+    if cfg.policy == "homed":
+        _audit_spills(cfg, pre, placements, charges)
+
+    # I3: free slots + admissible leftover work = a broken conservation law
+    placed_per_home = {h: sum(1 for p in placements if p.home == h)
+                       for h in cfg.homes}
+    if cfg.policy == "homed" and charges.target:
+        for h in cfg.homes:
+            if placed_per_home[h] >= len(slots_of[h]):
+                continue
+            leftovers = [e.req for _, q in post.queues for e in
+                         q[:cfg.lookahead]]
+            stuck = [r.rid for r in leftovers if r.span <= charges.target]
+            if stuck:
+                raise _Violation(
+                    "I3-work-conservation",
+                    f"home {h} left {len(slots_of[h]) - placed_per_home[h]} "
+                    f"slot(s) free while rid(s) {stuck} (span <= target "
+                    f"{charges.target}) stayed queued")
+
+
+def _audit_spills(cfg: SchedConfig, pre: SchedState, placements,
+                  charges) -> None:
+    """Re-run the donor scan for each spilled placement and demand the
+    recorded pick is cost-minimal at that point of the replay."""
+    queues = {h: [e.req for e in q] for h, q in pre.queues}
+    bindings = {b.session: b for b in pre.bindings}
+    sites: Dict[object, set] = {}
+
+    def touch(req, home):
+        b = bindings.get(req.session) if req.session is not None else None
+        if b is None:
+            return
+        ss = sites.setdefault(req.session, {b.home})
+        migrate = not (b.home != home and b.home in queues
+                       and any(r.session == req.session
+                               for r in queues[b.home]))
+        ss.add(home)
+        if migrate:
+            bindings[req.session] = b._replace(home=home)
+
+    for p in placements:
+        donor = p.home if p.spilled_from is None else p.spilled_from
+        req = next(r for r in queues[donor] if r.rid == p.rid)
+        if p.spilled_from is not None:
+            h = p.home
+            best = None
+            for d in cfg.homes:
+                if d == h:
+                    continue
+                for i, r in enumerate(queues[d][:cfg.lookahead]):
+                    if r.span > charges.target:
+                        continue
+                    b = (bindings.get(r.session)
+                         if r.session is not None else None)
+                    cost = (0 if b is None or b.home == h
+                            or h in sites.get(r.session, ())
+                            else b.tokens)
+                    key = (cost, cfg.pod(d) != cfg.pod(h),
+                           -len(queues[d]), d, i)
+                    if best is None or key < best[0]:
+                        best = (key, d, r)
+            if best is not None and (best[1], best[2].rid) != (donor,
+                                                               p.rid):
+                raise _Violation(
+                    "I7-spill-order",
+                    f"spill onto home {h} took rid {p.rid} from donor "
+                    f"{donor}, but rid {best[2].rid} from donor {best[1]} "
+                    f"was cheaper (key {best[0]})")
+        queues[donor].remove(req)
+        touch(req, p.home)
+
+
+# ---------------------------------------------------------------------------
+# the exhaustive exploration
+# ---------------------------------------------------------------------------
+def certify(entry: LatticeEntry) -> Tuple[Optional[Witness], int]:
+    """Explore every arrival/wave interleaving of one lattice entry.
+
+    Returns ``(witness, states_explored)`` — witness None means every
+    reachable transition satisfied I1–I7 (a proof over this config's
+    event space, not a sample).  BFS guarantees the witness is minimal.
+    """
+    cfg = entry.cfg
+    init = initial_state(cfg)
+    start = _canonical_key(init, entry.max_arrivals)
+    seen = {start}
+    frontier = deque([(init, entry.max_arrivals, ())])
+    explored = 0
+    try:
+        while frontier:
+            state, left, path = frontier.popleft()
+            explored += 1
+            if explored > MAX_STATES:
+                raise RuntimeError(
+                    f"{entry.name}: lattice closure exceeds MAX_STATES="
+                    f"{MAX_STATES}; shrink the entry — a capped sweep is "
+                    f"not a certificate")
+            for ev, nxt, nleft in _successors(cfg, entry, state, left,
+                                              path):
+                key = _canonical_key(nxt, nleft)
+                if key in seen:
+                    continue
+                seen.add(key)
+                frontier.append((nxt, nleft, path + (ev,)))
+    except _WitnessFound as wf:
+        return wf.witness, explored
+    return None, explored
+
+
+def _successors(cfg: SchedConfig, entry: LatticeEntry, state: SchedState,
+                left: int, path):
+    """Yield ``(event, state', arrivals_left')`` or raise via audit.
+
+    Arrival events draw from the entry's span alphabet crossed with the
+    visible session choices (each existing session, one fresh name while
+    under ``max_sessions``, and the session-less request); the wave event
+    is the atomic form+serve+complete boundary the server loop executes.
+    """
+    if left > 0:
+        sessions = sorted({b.session for b in state.bindings}
+                          | {e.session for e in state.fifo
+                             if e.session is not None}
+                          | {e.req.session for _, q in state.queues
+                             for e in q if e.req.session is not None})
+        choices: List[object] = [None] + sessions
+        if len(sessions) < entry.max_sessions:
+            fresh = 0
+            while f"s{fresh}" in sessions:
+                fresh += 1
+            choices.append(f"s{fresh}")
+        rid = f"a{entry.max_arrivals - left}"
+        for span in entry.spans:
+            for sess in choices:
+                nxt, _home = route_t(
+                    cfg, state, ReqInfo(rid=rid, span=span, session=sess))
+                yield (f"arrive({rid},span={span},sess={sess})", nxt,
+                       left - 1)
+    if state.pending:
+        now = max((b.last_used for b in state.bindings), default=0.0) + 1.0
+        mid, placements, charges = form_wave_t(cfg, state)
+        served = [Served(rid=p.rid, session=_session_of(state, p.rid),
+                         home=p.home, tokens=_span_of(state, p.rid))
+                  for p in placements]
+        post, evicted = complete_t(cfg, mid, served, now)
+        try:
+            _audit_wave(cfg, state, mid, placements, charges)
+            _check_post(cfg, state, post, served, evicted)
+        except _Violation as v:
+            raise _WitnessFound(Witness(
+                config=entry.name, invariant=v.invariant,
+                events=path + ("wave",), violation=str(v))) from None
+        yield ("wave", post, left)
+
+
+class _WitnessFound(Exception):
+    def __init__(self, witness: Witness):
+        super().__init__(witness.format())
+        self.witness = witness
+
+
+def _session_of(state: SchedState, rid):
+    for _, q in state.queues:
+        for e in q:
+            if e.req.rid == rid:
+                return e.req.session
+    for e in state.fifo:
+        if e.rid == rid:
+            return e.session
+    return None
+
+
+def _span_of(state: SchedState, rid) -> int:
+    for _, q in state.queues:
+        for e in q:
+            if e.req.rid == rid:
+                return e.req.span
+    for e in state.fifo:
+        if e.rid == rid:
+            return e.span
+    return 1
+
+
+def _check_post(cfg: SchedConfig, pre: SchedState, post: SchedState,
+                served, evicted) -> None:
+    """I2 (skips bound), I4 (eviction/capacity), I5 (fork marks cleared)."""
+    for h, q in post.queues:
+        for e in q:
+            if e.skips > cfg.max_skip:
+                raise _Violation(
+                    "I2-starvation",
+                    f"rid {e.req.rid} on home {h} skipped {e.skips} waves "
+                    f"(> max_skip={cfg.max_skip}): the aging floor failed")
+    per_home: Dict[int, int] = {}
+    for b in post.bindings:
+        per_home[b.home] = per_home.get(b.home, 0) + 1
+    for h, n in per_home.items():
+        if n > cfg.session_capacity:
+            raise _Violation(
+                "I4-eviction",
+                f"home {h} holds {n} bindings "
+                f"(capacity {cfg.session_capacity})")
+    pre_sessions = {b.session for b in pre.bindings}
+    post_sessions = {b.session for b in post.bindings}
+    gone = pre_sessions - post_sessions
+    dropped = {b.session for b in evicted}
+    if gone - dropped:
+        raise _Violation("I4-eviction",
+                         f"binding(s) {sorted(gone - dropped)} vanished "
+                         f"without an eviction record")
+    # an evicted session may only reappear when a *later completion of
+    # that session in the same wave* rebound it afresh — never by the
+    # eviction itself relocating the cache
+    rebound = dropped & post_sessions
+    reestablished = {sv.session for sv in served}
+    if rebound - reestablished:
+        raise _Violation("I4-eviction",
+                         f"evicted session(s) {sorted(rebound - reestablished)}"
+                         f" still bound — eviction must drop, not migrate")
+    for b in post.bindings:
+        if b.session in rebound and not any(
+                sv.session == b.session and sv.home == b.home
+                for sv in served):
+            raise _Violation(
+                "I4-eviction",
+                f"evicted session {b.session} rebound on home {b.home} "
+                f"where no completion of it landed")
+    # every wave serves all its placements, so no fork mark survives it
+    if post.forked:
+        raise _Violation("I5-binding-leak",
+                         f"fork mark(s) {set(post.forked)} outlived the "
+                         f"wave that made them")
+
+
+# ---------------------------------------------------------------------------
+# the lattice and its rule/CLI surface
+# ---------------------------------------------------------------------------
+def _cfg(owners, **kw) -> SchedConfig:
+    base = dict(policy="homed", n_slots=len(owners), owners=tuple(owners),
+                bytes_per_token=2, lookahead=8, max_skip=1,
+                session_capacity=2, affinity_slack=1)
+    base.update(kw)
+    return SchedConfig(**base)
+
+
+#: the full small-config lattice the certificate covers: homes <= 4,
+#: slots <= 8, sessions <= 6 concurrent, spans <= 3 distinct — and
+#: ``lookahead >= max_arrivals`` throughout, so the formation windows see
+#: every queued entry and I3's conservation claim is unconditional.
+DEFAULT_LATTICE: Tuple[LatticeEntry, ...] = (
+    LatticeEntry("fifo-2x2", _cfg((0, 0, 1, 1), policy="fifo"),
+                 max_arrivals=5, spans=(1, 2), max_sessions=2),
+    LatticeEntry("homed-1x2", _cfg((0, 0)),
+                 max_arrivals=5, spans=(1, 2), max_sessions=2),
+    LatticeEntry("homed-2x1", _cfg((0, 1)),
+                 max_arrivals=5, spans=(1, 2), max_sessions=2),
+    LatticeEntry("homed-2x2", _cfg((0, 0, 1, 1)),
+                 max_arrivals=5, spans=(1, 2, 3), max_sessions=2),
+    LatticeEntry("homed-3x1", _cfg((0, 1, 2)),
+                 max_arrivals=5, spans=(1, 2), max_sessions=3),
+    LatticeEntry("homed-evict", _cfg((0, 1), session_capacity=1),
+                 max_arrivals=5, spans=(1, 2), max_sessions=3),
+    LatticeEntry("homed-pods-4x2",
+                 _cfg((0, 0, 1, 1, 2, 2, 3, 3), homes_per_pod=2),
+                 max_arrivals=4, spans=(1, 3), max_sessions=3),
+)
+
+
+#: the cheap corner of the lattice `check_decode` runs per target; the
+#: CLI certificate and the certification test always sweep the full one
+FAST_LATTICE: Tuple[LatticeEntry, ...] = tuple(
+    e for e in DEFAULT_LATTICE
+    if e.name in ("fifo-2x2", "homed-2x1", "homed-evict",
+                  "homed-pods-4x2"))
+
+_cert_cache: Dict[Tuple[LatticeEntry, ...], Dict] = {}
+
+
+def certify_lattice(lattice: Sequence[LatticeEntry] = DEFAULT_LATTICE
+                    ) -> Dict:
+    """The scheduler certificate the CLI prints and `run.py` stamps:
+    ``{entry: {"states": N, "witness": None | Witness}}``.  Memoized per
+    lattice (the transitions are pure), so one process pays once."""
+    key = tuple(lattice)
+    if key in _cert_cache:
+        return _cert_cache[key]
+    out: Dict = {}
+    for entry in lattice:
+        witness, states = certify(entry)
+        out[entry.name] = {"states": states, "witness": witness,
+                           "cfg": entry.cfg}
+    _cert_cache[key] = out
+    return out
+
+
+def r9_scheduler_certification(report: Report,
+                               lattice: Sequence[LatticeEntry]
+                               = DEFAULT_LATTICE) -> None:
+    """Run R9: certify the transition functions over the lattice; any
+    witness is an ERROR carrying the minimal violating event script."""
+    cert = certify_lattice(tuple(lattice))
+    bad = {n: rec for n, rec in cert.items() if rec["witness"] is not None}
+    for name, rec in bad.items():
+        w: Witness = rec["witness"]
+        report.add(Finding(
+            "R9", Severity.ERROR, "scheduler",
+            message=f"{w.invariant} violated — {w.format()}"))
+    if not bad:
+        total = sum(rec["states"] for rec in cert.values())
+        report.notes.append(
+            f"R9: scheduler certified — I1-I7 hold over {len(cert)} "
+            f"lattice configs, {total} canonical states explored "
+            f"exhaustively")

@@ -304,14 +304,18 @@ class Locale:
         """Statically verify a workload's lowering against this locale.
 
         The homecheck hook: lowers ``self.workload(workload, ...)`` for a
-        representative input and runs rules R1-R8 (surprise collectives,
+        representative input and runs rules R1-R11 (surprise collectives,
         home leaks, VMEM budget, donation audit, pallas write-race/
         coverage, exchange-network certification, index-arithmetic lint,
-        dead grid lanes) over the partitioned HLO, jaxpr, and exchange
-        network without executing anything.  Returns an
+        dead grid lanes, scheduler certification, HBM live-range,
+        collective control flow) over the partitioned HLO, jaxpr, and
+        exchange network without executing anything.  Returns an
         `analysis.Report`; ``report.clean`` is the contract.  `rules`
         selects a subset (e.g. ``rules=("R5", "R6")``; None = all);
         `suppress` drops findings by rule id (e.g. ``suppress=("R4",)``).
+        R9 applies to the serving target only (other workloads note the
+        skip); R10 gates against `repro.kernels.HBM_BYTES_PER_DEVICE`
+        unless ``hbm_ceiling=`` overrides it.
         """
         from repro.analysis import check_workload
         return check_workload(self, workload, rules=rules,

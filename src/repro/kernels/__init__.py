@@ -6,3 +6,11 @@
 # bound this implies; `repro.analysis` rule R3 enforces it statically for
 # every `pallas_call` in a lowered workload.
 VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+
+# Per-device HBM capacity the compiled programs budget against (a 16 GiB
+# accelerator attach point; CPU emulation has host RAM instead but the
+# production contract is sized to this).  `repro.analysis` rule R10 gates
+# each workload's peak live bytes — from the XLA buffer liveness of the
+# compiled module — against it, and the headroom it reports is what sizes
+# the KV prefix pools of the serving scheduler.
+HBM_BYTES_PER_DEVICE = 16 * 1024 * 1024 * 1024

@@ -7,13 +7,20 @@
         [--rules all|R1 R5 R6 ...] [--suppress R4 ...] [--json] [--verbose]
 
 Lowers the selected workload(s) over the requested (emulated) mesh and
-runs rules R1-R8 (see `repro.analysis`) on the partitioned HLO + jaxpr +
+runs rules R1-R11 (see `repro.analysis`) on the partitioned HLO + jaxpr +
 exchange network — nothing executes.  ``--rules`` selects a subset
 (default all): R1/R2 collective budget + home leaks, R3 VMEM, R4
 donation, R5 pallas write-race/coverage, R6 sorting-network
-certification, R7 index-arithmetic/sentinel lint, R8 dead grid lanes.
+certification, R7 index-arithmetic/sentinel lint, R8 dead grid lanes,
+R9 scheduler-invariant certification, R10 HBM live-range vs the
+per-device ceiling (``--hbm-ceiling`` overrides), R11 collectives under
+data-dependent control flow.
 When R6 is active the sweep also prints the repo-wide certificate: every
 supported policy 0-1-certified over every mesh shape up to 16 devices.
+When R9 is active the sweep prints the scheduler certificate: invariants
+I1-I7 proved by exhaustive interleaving search over the full small-config
+lattice (per-target reports run the fast corner; the certificate here is
+the full one).
 ``--pods`` sets ``XLA_FLAGS`` itself, so the command is self-sufficient
 on a laptop.  Exit status 1 on any ERROR-severity finding (and 2 on a
 driver failure), so `runtime.ft.Supervisor`/CI can supervise it
@@ -77,9 +84,12 @@ def main(argv=None) -> int:
     ap.add_argument("--reps", type=int, default=4, help="microbench passes")
     ap.add_argument("--arch", default="qwen3-0.6b", help="serve config")
     ap.add_argument("--rules", nargs="*", default=None, metavar="RULE",
-                    help="rules to run (R1..R8 or 'all'; default all); "
-                         "with R6 active the repo-wide mesh certificate "
-                         "is printed too")
+                    help="rules to run (R1..R11 or 'all'; default all); "
+                         "with R6/R9 active the repo-wide mesh and "
+                         "scheduler certificates are printed too")
+    ap.add_argument("--hbm-ceiling", type=int, default=None,
+                    help="R10 per-device HBM ceiling in bytes (default "
+                         "repro.kernels.HBM_BYTES_PER_DEVICE)")
     ap.add_argument("--suppress", nargs="*", default=(), metavar="RULE",
                     help="rule ids to drop from the report (e.g. R4)")
     ap.add_argument("--json", action="store_true", dest="as_json")
@@ -131,6 +141,7 @@ def main(argv=None) -> int:
     for name in names:
         if name == "serve":
             reports.append(check_decode(mesh, cfg_name=args.arch,
+                                        hbm_ceiling=args.hbm_ceiling,
                                         rules=rules,
                                         suppress=args.suppress))
             continue
@@ -140,13 +151,31 @@ def main(argv=None) -> int:
             reports.append(check_workload(
                 locale, name, backend=args.backend,
                 num_workers=args.num_workers, logn=args.logn,
-                reps=args.reps, rules=rules, suppress=args.suppress))
+                reps=args.reps, hbm_ceiling=args.hbm_ceiling,
+                rules=rules, suppress=args.suppress))
 
     for rep in reports:
         print(rep.to_json() if args.as_json
               else rep.format(verbose=args.verbose))
 
     cert_errors = 0
+    if "R9" in rules:
+        from repro.analysis import DEFAULT_LATTICE, certify_lattice
+        cert = certify_lattice(DEFAULT_LATTICE)
+        bad = {n: rec for n, rec in cert.items()
+               if rec["witness"] is not None}
+        total_states = sum(rec["states"] for rec in cert.values())
+        if bad:
+            cert_errors += len(bad)
+            for n, rec in bad.items():
+                print(f"R9 certificate FAILED [{n}]: "
+                      f"{rec['witness'].format()}")
+        else:
+            configs = ", ".join(f"{n}({rec['states']})"
+                                for n, rec in cert.items())
+            print(f"R9 certificate [scheduler]: I1-I7 hold over "
+                  f"{len(cert)} lattice config(s), {total_states} "
+                  f"canonical states explored exhaustively ({configs})")
     if "R6" in rules:
         cert = certify_supported_meshes()
         for pname, rec in sorted(cert.items()):

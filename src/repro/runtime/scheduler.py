@@ -50,18 +50,32 @@ bytes, split inter-pod vs intra-pod on hierarchical (pod-major) locales.
 Both policies run bit-identical decode compute for the same request set
 (the server's fixed ``prompt_pad`` makes each row's numerics independent
 of wave composition), so the byte/step deltas are pure scheduling wins.
+
+Every decision above is made by *pure transition functions* over an
+immutable `SchedState` — ``route_t``, ``form_wave_t``, ``complete_t``:
+state in, ``(state', placements, charges)`` out, the `exchange_network`
+move from PR 7.  The `Scheduler` class is a thin stateful shell that
+replays the charges into its stats tables; `repro.analysis.schedcheck`
+(rule R9) exhaustively explores the same transitions over a small-config
+lattice and certifies the invariants the docstring promises.  The
+``SchedConfig.mutations`` hook exists solely for that checker's committed
+known-bad fixtures — production schedulers never set it.
 """
 from __future__ import annotations
 
 import heapq
 import math
-from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import (Dict, FrozenSet, List, NamedTuple, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 POLICIES = ("fifo", "homed")
+
+# known-bad transition variants `analysis/fixtures.py` commits for R9;
+# every name here must make `schedcheck.certify` produce a witness
+MUTATIONS = ("no_aging", "drop_charge", "greedy_spill")
 
 
 def kv_bytes_per_token(cfg) -> int:
@@ -78,20 +92,411 @@ def kv_bytes_per_token(cfg) -> int:
         * itemsize
 
 
-@dataclass
-class _Binding:
+# ---------------------------------------------------------------------------
+# the pure transition layer: immutable config/state, inspectable decisions
+# ---------------------------------------------------------------------------
+class ReqInfo(NamedTuple):
+    """What a scheduling decision may observe about one request.
+
+    ``rid`` is any unique hashable id (the shell uses its submission
+    counter); ``span`` is the slot occupancy in wave steps — with a fixed
+    server pad bucket every wave prefills ``prompt_pad`` rows regardless
+    of the admitted prompts, so the span that predicts wave cost uses the
+    bucket, not the raw prompt length."""
+    rid: object
+    span: int
+    session: object = None
+
+
+class QEntry(NamedTuple):
+    req: ReqInfo
+    skips: int = 0
+
+
+class Binding(NamedTuple):
     """Where a session's cached KV prefix lives: its *home* and size."""
+    session: object
     home: int
     tokens: int
     last_used: float
 
 
-@dataclass
-class _Entry:
-    req: object
-    skips: int = 0
+class Placement(NamedTuple):
+    """One admitted request: decodes on ``home`` (which owns ``slot``);
+    ``spilled_from`` names the donor queue when work conservation pulled
+    it across homes, else None."""
+    slot: int
+    rid: object
+    home: int
+    spilled_from: Optional[int] = None
 
 
+class Charge(NamedTuple):
+    """One session-cache relayout the wave decided to pay.  ``migrate``
+    distinguishes a rebind (the canonical cache moved) from the one-way
+    *fork* copy a spill takes when the session still has work queued at
+    its bound home."""
+    rid: object
+    session: object
+    src: int
+    dst: int
+    tokens: int
+    nbytes: int
+    inter_pod: bool
+    migrate: bool
+
+
+class Charges(NamedTuple):
+    """Everything `form_wave_t` decided to pay and why: the replayable
+    accounting record the shell turns into stats and R9 audits move-by-
+    move against an independent model."""
+    moves: Tuple[Charge, ...]
+    target: int
+    floor: int
+
+
+@dataclass(frozen=True)
+class SchedConfig:
+    """The immutable decision parameters (`Scheduler.__init__` validated).
+
+    ``mutations`` enables committed known-bad transition variants for the
+    R9 checker (`MUTATIONS`); production configs leave it empty."""
+    policy: str = "fifo"
+    n_slots: int = 1
+    owners: Tuple[int, ...] = (0,)
+    bytes_per_token: int = 0
+    lookahead: int = 8
+    max_skip: int = 4
+    homes_per_pod: Optional[int] = None
+    session_capacity: int = 4
+    affinity_slack: int = 2
+    mutations: FrozenSet[str] = frozenset()
+
+    @property
+    def homes(self) -> Tuple[int, ...]:
+        return tuple(sorted(set(self.owners)))
+
+    @property
+    def slots_of(self) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        for s, h in enumerate(self.owners):
+            out.setdefault(h, []).append(s)
+        return out
+
+    def pod(self, home: int) -> int:
+        return home // self.homes_per_pod if self.homes_per_pod else 0
+
+
+@dataclass(frozen=True)
+class SchedState:
+    """The entire mutable world a decision may read, as immutable tuples.
+
+    ``queues`` maps home -> arrival-ordered entries; ``bindings`` keeps
+    the session table in *insertion order* (dict semantics: an update
+    keeps its slot, a new binding appends) because LRU eviction ties on
+    ``last_used`` break by that order; ``forked`` holds rids of in-flight
+    spill copies that must not rebind at completion."""
+    queues: Tuple[Tuple[int, Tuple[QEntry, ...]], ...] = ()
+    fifo: Tuple[ReqInfo, ...] = ()
+    bindings: Tuple[Binding, ...] = ()
+    forked: FrozenSet[object] = frozenset()
+
+    def queue(self, home: int) -> Tuple[QEntry, ...]:
+        for h, q in self.queues:
+            if h == home:
+                return q
+        return ()
+
+    def binding(self, session) -> Optional[Binding]:
+        if session is None:
+            return None
+        for b in self.bindings:
+            if b.session == session:
+                return b
+        return None
+
+    @property
+    def pending(self) -> int:
+        return len(self.fifo) + sum(len(q) for _, q in self.queues)
+
+
+def initial_state(cfg: SchedConfig) -> SchedState:
+    return SchedState(queues=tuple((h, ()) for h in cfg.homes))
+
+
+def _queues_dict(state: SchedState) -> Dict[int, List[QEntry]]:
+    return {h: list(q) for h, q in state.queues}
+
+
+def _bindings_dict(state: SchedState) -> Dict[object, Binding]:
+    return {b.session: b for b in state.bindings}
+
+
+def _pack(queues: Dict[int, List[QEntry]], fifo: List[ReqInfo],
+          bindings: Dict[object, Binding],
+          forked: FrozenSet[object]) -> SchedState:
+    return SchedState(
+        queues=tuple((h, tuple(q)) for h, q in queues.items()),
+        fifo=tuple(fifo), bindings=tuple(bindings.values()), forked=forked)
+
+
+def route_t(cfg: SchedConfig, state: SchedState,
+            req: ReqInfo) -> Tuple[SchedState, int]:
+    """Admit one arrival: returns ``(state', home)``.  Affinity keeps a
+    bound session with its cache unless its home's queue runs
+    ``affinity_slack`` entries past the least-loaded one (the hot-home
+    relief valve); an unbound request always balances."""
+    if cfg.policy == "fifo":
+        return _pack(_queues_dict(state), list(state.fifo) + [req],
+                     _bindings_dict(state), state.forked), -1
+    queues = _queues_dict(state)
+    b = state.binding(req.session)
+    least = min(cfg.homes, key=lambda h: (len(queues[h]), h))
+    if (b is not None and b.home in queues
+            and len(queues[b.home]) - len(queues[least])
+            <= cfg.affinity_slack):
+        home = b.home                       # affinity: stay with the cache
+    else:
+        # no cached home, or the bound home is running hot: balance wins
+        # (any cached prefix is dragged along — charged at admission)
+        home = least
+    queues[home].append(QEntry(req))
+    return _pack(queues, list(state.fifo), _bindings_dict(state),
+                 state.forked), home
+
+
+class _WaveCtx:
+    """Mutable scratch shared by one `form_wave_t` call: the evolving
+    binding table, the per-wave cache-copy sites, and the move record."""
+
+    def __init__(self, cfg: SchedConfig, state: SchedState):
+        self.cfg = cfg
+        self.bindings = _bindings_dict(state)
+        self.forked = set(state.forked)
+        self.sites: Dict[object, set] = {}   # session -> homes holding a
+        #   copy of its cache *this wave* (a second request reuses it free)
+        self.moves: List[Charge] = []
+
+    def charge_move(self, req: ReqInfo, new_home: int,
+                    migrate: bool = True) -> None:
+        """Account the session-cache relayout implied by landing off-home.
+
+        ``migrate=False`` is the *fork* form a spill uses when the session
+        still has work queued on its bound home: the cached prefix is
+        copied to the spill home for this one request (bytes charged) but
+        the canonical cache — and every later request's affinity — stays
+        put, so the session doesn't ping-pong home every wave.
+        """
+        b = self.bindings.get(req.session) if req.session is not None \
+            else None
+        if b is None:
+            return
+        sites = self.sites.setdefault(req.session, {b.home})
+        if new_home not in sites and new_home != b.home:
+            if "drop_charge" not in self.cfg.mutations:
+                self.moves.append(Charge(
+                    rid=req.rid, session=req.session, src=b.home,
+                    dst=new_home, tokens=b.tokens,
+                    nbytes=b.tokens * self.cfg.bytes_per_token,
+                    inter_pod=self.cfg.pod(b.home) != self.cfg.pod(new_home),
+                    migrate=migrate))
+        sites.add(new_home)
+        if migrate:
+            self.bindings[b.session] = b._replace(home=new_home)
+        elif new_home != b.home:
+            self.forked.add(req.rid)        # one-way copy; don't rebind
+
+
+def _pick_target(cfg: SchedConfig,
+                 queues: Dict[int, List[QEntry]]) -> Tuple[int, int]:
+    """The wave's step target: the span that maximises slot utilisation.
+
+    Candidate targets are the distinct spans visible in the per-home
+    lookahead windows; for each, the admissible work is every windowed
+    entry fitting it (slot-capped per home, spill-eligible across
+    homes), and the wave utilisation is that work over the capacity the
+    wave would offer (``n_slots * target``).  Short decodes therefore
+    batch with short decodes instead of padlocking behind a long one —
+    but an *aged* entry (skipped ``max_skip`` waves) bounds staleness
+    by forcing the target up to its own span.  Returns ``(target,
+    floor)``; target 0 = nothing queued.
+    """
+    slots_of = cfg.slots_of
+    windows = [queues[h][:cfg.lookahead] for h in cfg.homes]
+    spans = sorted({e.req.span for w in windows for e in w})
+    if not spans:
+        return 0, 0
+    # drain-all guard: when everything queued fits one wave, splitting
+    # it by span class only buys extra prefill waves — take it all
+    if (sum(len(q) for q in queues.values()) <= cfg.n_slots
+            and all(len(q) <= cfg.lookahead for q in queues.values())):
+        return spans[-1], 0
+    floor = 0 if "no_aging" in cfg.mutations else \
+        max((e.req.span for w in windows for e in w
+             if e.skips >= cfg.max_skip), default=0)
+    best_t, best_eff = 0, -1.0
+    for t in spans:
+        if t < floor:
+            continue
+        busy, used, pool = 0, 0, []
+        for h, w in zip(cfg.homes, windows):
+            fits = sorted(e.req.span for e in w if e.req.span <= t)
+            cap = len(slots_of[h])
+            busy += sum(fits[:cap])              # this home's own slots
+            used += min(len(fits), cap)
+            pool += fits[cap:]                   # spill-eligible excess
+        busy += sum(sorted(pool)[:cfg.n_slots - used])
+        eff = busy / (cfg.n_slots * t)
+        if eff > best_eff + 1e-12:
+            best_t, best_eff = t, eff
+    return max(best_t, floor), floor
+
+
+def _place(ctx: _WaveCtx, queues: Dict[int, List[QEntry]],
+           placements: List[Placement], slot: int, req: ReqInfo,
+           home: int, spilled_from: Optional[int] = None) -> None:
+    """Admit one request onto one slot: charge the relayout its landing
+    implies (fork vs migrate — see `_WaveCtx.charge_move`) and keep the
+    invariant that a request only ever decodes on the home owning its
+    slot."""
+    b = ctx.bindings.get(req.session) if req.session is not None else None
+    migrate = not (b is not None and b.home != home
+                   and b.home in queues
+                   and any(x.req.session == req.session
+                           for x in queues[b.home]))
+    ctx.charge_move(req, home, migrate=migrate)
+    assert ctx.cfg.owners[slot] == home          # the invariant
+    placements.append(Placement(slot, req.rid, home, spilled_from))
+
+
+def form_wave_t(cfg: SchedConfig, state: SchedState
+                ) -> Tuple[SchedState, Tuple[Placement, ...], Charges]:
+    """One wave-boundary batch, purely: ``(state', placements, charges)``.
+
+    Placements come back in *decision order* (fill before spill) so a
+    checker can replay them against the pre-wave queues; the shell sorts
+    by slot before reporting.  Every placement decodes on the home that
+    owns its slot, and every cache byte the decisions move is a `Charge`
+    in ``charges.moves`` — the complete accounting record.
+    """
+    if cfg.policy == "fifo":
+        ctx = _WaveCtx(cfg, state)
+        fifo = list(state.fifo)
+        placements: List[Placement] = []
+        while fifo and len(placements) < cfg.n_slots:
+            req = fifo.pop(0)
+            slot = len(placements)               # whatever slot frees first
+            ctx.charge_move(req, cfg.owners[slot])
+            placements.append(Placement(slot, req.rid, cfg.owners[slot]))
+        return (_pack(_queues_dict(state), fifo, ctx.bindings,
+                      frozenset(ctx.forked)),
+                tuple(placements), Charges(tuple(ctx.moves), 0, 0))
+
+    ctx = _WaveCtx(cfg, state)
+    queues = _queues_dict(state)
+    placements = []
+    free: Dict[int, List[int]] = {h: list(s)
+                                  for h, s in cfg.slots_of.items()}
+    target, floor = _pick_target(cfg, queues)
+    if target == 0:
+        return state, (), Charges((), 0, floor)
+    # 2. fill: each home admits from its own queue, front first (bounded
+    # lookahead), every entry whose span fits the target — which
+    # `_pick_target` already raised above every aged entry's span, so
+    # nothing admissible can outgrow the wave mid-fill
+    for h in cfg.homes:
+        q = queues[h]
+        kept: List[QEntry] = []
+        scanned = 0
+        while q and free[h] and scanned < cfg.lookahead:
+            e = q.pop(0)
+            scanned += 1
+            if e.req.span <= target:
+                _place(ctx, queues, placements, free[h].pop(0), e.req, h)
+            else:
+                kept.append(e._replace(skips=e.skips + 1))
+        q[:0] = kept
+    # 3. spill: idle capacity pulls fitting work from other queues —
+    # work conservation over strict affinity.  Donor choice minimises
+    # the relayout it causes: unbound (or already-here) sessions move
+    # free, bound ones cost their cached tokens; same-pod donors break
+    # ties so a spill crosses DCN only when ICI has nothing to give.
+    greedy = "greedy_spill" in cfg.mutations
+    for h in cfg.homes:
+        while free[h]:
+            pick = None
+            for d in cfg.homes:
+                if d == h:
+                    continue
+                for i, e in enumerate(queues[d][:cfg.lookahead]):
+                    if e.req.span > target:
+                        continue
+                    b = (ctx.bindings.get(e.req.session)
+                         if e.req.session is not None else None)
+                    cost = (0 if b is None or b.home == h
+                            or h in ctx.sites.get(e.req.session, ())
+                            else b.tokens)
+                    key = (cost, cfg.pod(d) != cfg.pod(h),
+                           -len(queues[d]), d, i)
+                    if pick is None or (not greedy and key < pick[0]):
+                        pick = (key, d, i)
+                if greedy and pick is not None:
+                    break
+            if pick is None:
+                break
+            _, d, i = pick
+            e = queues[d].pop(i)
+            _place(ctx, queues, placements, free[h].pop(0), e.req, h,
+                   spilled_from=d)
+    return (_pack(queues, list(state.fifo), ctx.bindings,
+                  frozenset(ctx.forked)),
+            tuple(placements), Charges(tuple(ctx.moves), target, floor))
+
+
+class Served(NamedTuple):
+    """What completion reports per request: its final cached size."""
+    rid: object
+    session: object
+    home: int
+    tokens: int
+
+
+def complete_t(cfg: SchedConfig, state: SchedState,
+               served: Sequence[Served], now: float
+               ) -> Tuple[SchedState, Tuple[Binding, ...]]:
+    """Rebind completed sessions (LRU-touch fork copies instead) and run
+    per-home LRU compaction: returns ``(state', evicted_bindings)``.
+    Evicted bindings are *dropped on their own home*, never migrated —
+    a cached session leaves its home only by being freed."""
+    bindings = _bindings_dict(state)
+    forked = set(state.forked)
+    evicted: List[Binding] = []
+    for sv in served:
+        if sv.session is None:
+            continue
+        if sv.rid in forked:
+            # a spill copy: the canonical cache never left its home
+            forked.discard(sv.rid)
+            b = bindings.get(sv.session)
+            if b is not None:
+                bindings[sv.session] = b._replace(last_used=now)
+            continue
+        bindings[sv.session] = Binding(sv.session, sv.home, sv.tokens, now)
+        # sort once, take the over-capacity prefix oldest-first (ties
+        # break by insertion order — the sort is stable over the dict)
+        mine = [b for b in bindings.values() if b.home == sv.home]
+        if len(mine) > cfg.session_capacity:
+            mine.sort(key=lambda b: b.last_used)
+            for b in mine[:len(mine) - cfg.session_capacity]:
+                del bindings[b.session]
+                evicted.append(b)
+    return _pack(_queues_dict(state), list(state.fifo), bindings,
+                 frozenset(forked)), tuple(evicted)
+
+
+# ---------------------------------------------------------------------------
+# the stateful shell: arrival clock, request objects, stats
+# ---------------------------------------------------------------------------
 @dataclass
 class HomeStats:
     admitted: int = 0
@@ -116,6 +521,7 @@ class ScheduleStats:
     relayout_events: int = 0
     served: int = 0
     tokens_out: int = 0
+    affinity_hits: int = 0       # placements landing on the session's home
 
     def wait_pct(self, q: float) -> float:
         if not self.waits:
@@ -125,6 +531,11 @@ class ScheduleStats:
 
 class Scheduler:
     """Route, batch and evict decode requests by KV-cache home.
+
+    A thin shell over the pure transitions above: it owns the arrival
+    heap, the `Request` objects and the stats tables; every decision is
+    `route_t`/`form_wave_t`/`complete_t` on ``self.state``, and the stats
+    are replayed from the `Charges` those transitions return.
 
     ``owners`` maps slot index -> home-device index (``Locale.owners``:
     `chunk_bounds` applied to slots).  ``homes_per_pod`` is the number of
@@ -143,40 +554,47 @@ class Scheduler:
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; want one of "
                              f"{POLICIES}")
-        self.policy = policy
-        self.n_slots = n_slots
         owners = tuple(owners) if owners is not None else (0,) * n_slots
         if len(owners) != n_slots:
             raise ValueError(f"owners maps {len(owners)} slots, server has "
                              f"{n_slots}")
-        self.owners = owners
-        # slots of each home, in slot order — ownership is chunk-contiguous
-        self.slots_of: Dict[int, List[int]] = {}
-        for s, h in enumerate(owners):
-            self.slots_of.setdefault(h, []).append(s)
-        self.homes = sorted(self.slots_of)
-        self.bytes_per_token = bytes_per_token
-        self.lookahead = lookahead
-        self.max_skip = max_skip
-        self.homes_per_pod = homes_per_pod
-        sph = max(len(v) for v in self.slots_of.values())
-        self.session_capacity = (session_capacity if session_capacity
-                                 is not None else 4 * sph)
-        # affinity yields to balance once the bound home's queue runs this
-        # many entries past the least-loaded one (the hot-home relief valve)
-        self.affinity_slack = (affinity_slack if affinity_slack is not None
-                               else 2 * sph)
+        sph = max(len(v) for v in SchedConfig(owners=owners).slots_of
+                  .values())
+        self.cfg = SchedConfig(
+            policy=policy, n_slots=n_slots, owners=owners,
+            bytes_per_token=bytes_per_token, lookahead=lookahead,
+            max_skip=max_skip, homes_per_pod=homes_per_pod,
+            session_capacity=(session_capacity if session_capacity
+                              is not None else 4 * sph),
+            # affinity yields to balance once the bound home's queue runs
+            # this many entries past the least-loaded one (the hot-home
+            # relief valve)
+            affinity_slack=(affinity_slack if affinity_slack is not None
+                            else 2 * sph))
         self.prompt_pad = prompt_pad     # the server's fixed prefill bucket
+        self.state = initial_state(self.cfg)
         self._future: List[Tuple[float, int, object]] = []   # arrival heap
         self._seq = 0
-        self._fifo: deque = deque()                          # policy="fifo"
-        self._queues: Dict[int, deque] = {h: deque() for h in self.homes}
-        self._bindings: Dict[object, _Binding] = {}
-        self._forked: set = set()          # spill copies that must not rebind
-        self._wave_sites: Dict[object, set] = {}   # session -> homes holding
-        #   a copy of its cache *this wave* (a second request reuses it free)
+        self._uid = 0                        # monotone ReqInfo.rid source
+        self._reqs: Dict[int, object] = {}   # uid -> queued Request
         self.stats = ScheduleStats(
             homes={h: HomeStats() for h in self.homes})
+
+    # config views (the shell's public surface predates SchedConfig)
+    policy = property(lambda self: self.cfg.policy)
+    n_slots = property(lambda self: self.cfg.n_slots)
+    owners = property(lambda self: self.cfg.owners)
+    bytes_per_token = property(lambda self: self.cfg.bytes_per_token)
+    lookahead = property(lambda self: self.cfg.lookahead)
+    max_skip = property(lambda self: self.cfg.max_skip)
+    homes_per_pod = property(lambda self: self.cfg.homes_per_pod)
+    session_capacity = property(lambda self: self.cfg.session_capacity)
+    affinity_slack = property(lambda self: self.cfg.affinity_slack)
+    slots_of = property(lambda self: self.cfg.slots_of)
+
+    @property
+    def homes(self) -> List[int]:
+        return list(self.cfg.homes)
 
     # ------------------------------------------------------------ submission
     def submit(self, req) -> None:
@@ -186,142 +604,31 @@ class Scheduler:
         self._seq += 1
 
     def has_work(self) -> bool:
-        return bool(self._future or self._fifo
-                    or any(self._queues.values()))
+        return bool(self._future) or self.state.pending > 0
 
     def clock(self, now: float) -> float:
         """Advance the clock to the next actionable instant (arrival jump)."""
-        if self._fifo or any(self._queues.values()):
+        if self.state.pending:
             return now
         if self._future:
             return max(now, self._future[0][0])
         return now
 
+    def _span(self, req) -> int:
+        return (self.prompt_pad or len(req.prompt)) + req.max_new
+
     def _admit(self, now: float) -> None:
         while self._future and self._future[0][0] <= now:
             _, _, req = heapq.heappop(self._future)
-            self._route(req, now)
-
-    def _load(self, h: int) -> int:
-        return len(self._queues[h])
-
-    def _route(self, req, now: float) -> None:
-        if self.policy == "fifo":
-            self._fifo.append(_Entry(req))
-            return
-        b = self._bindings.get(req.session) if req.session is not None else None
-        least = min(self.homes, key=lambda h: (self._load(h), h))
-        if (b is not None and b.home in self._queues
-                and self._load(b.home) - self._load(least)
-                <= self.affinity_slack):
-            home = b.home                       # affinity: stay with the cache
-        else:
-            # no cached home, or the bound home is running hot: balance wins
-            # (any cached prefix is dragged along — charged at admission)
-            home = least
-        req.home = home
-        self._queues[home].append(_Entry(req))
-
-    # ------------------------------------------------------------ relayout
-    def _pod(self, home: int) -> int:
-        return home // self.homes_per_pod if self.homes_per_pod else 0
-
-    def _charge_move(self, req, new_home: int, migrate: bool = True) -> None:
-        """Account the session-cache relayout implied by landing off-home.
-
-        ``migrate=False`` is the *fork* form a spill uses when the session
-        still has work queued on its bound home: the cached prefix is
-        copied to the spill home for this one request (bytes charged) but
-        the canonical cache — and every later request's affinity — stays
-        put, so the session doesn't ping-pong home every wave.
-        """
-        b = self._bindings.get(req.session) if req.session is not None else None
-        if b is None:
-            return
-        sites = self._wave_sites.setdefault(req.session, {b.home})
-        if new_home not in sites and new_home != b.home:
-            nbytes = b.tokens * self.bytes_per_token
-            if nbytes:
-                self.stats.relayout_bytes += nbytes
-                self.stats.relayout_events += 1
-                self.stats.homes[new_home].relayout_bytes += nbytes
-                if self._pod(b.home) != self._pod(new_home):
-                    self.stats.inter_pod_bytes += nbytes
-                else:
-                    self.stats.intra_pod_bytes += nbytes
-        sites.add(new_home)
-        if migrate:
-            b.home = new_home                   # the cache moved with it
-        elif new_home != b.home:
-            self._forked.add(id(req))           # one-way copy; don't rebind
+            uid, self._uid = self._uid, self._uid + 1
+            info = ReqInfo(rid=uid, span=self._span(req),
+                           session=req.session)
+            self._reqs[uid] = req
+            self.state, home = route_t(self.cfg, self.state, info)
+            if home >= 0:
+                req.home = home
 
     # ------------------------------------------------------------ formation
-    def _span(self, req) -> int:
-        """A request's slot occupancy in wave steps: prefill rows + decode.
-
-        With a fixed server pad bucket every wave prefills ``prompt_pad``
-        rows regardless of the admitted prompts, so the span that predicts
-        wave cost uses the bucket, not the raw prompt length."""
-        return (self.prompt_pad or len(req.prompt)) + req.max_new
-
-    def _pick_target(self) -> int:
-        """The wave's step target: the span that maximises slot utilisation.
-
-        Candidate targets are the distinct spans visible in the per-home
-        lookahead windows; for each, the admissible work is every windowed
-        entry fitting it (slot-capped per home, spill-eligible across
-        homes), and the wave utilisation is that work over the capacity the
-        wave would offer (``n_slots * target``).  Short decodes therefore
-        batch with short decodes instead of padlocking behind a long one —
-        but an *aged* entry (skipped ``max_skip`` waves) bounds staleness
-        by forcing the target up to its own span.  0 = nothing queued.
-        """
-        windows = [list(self._queues[h])[:self.lookahead]
-                   for h in self.homes]
-        spans = sorted({self._span(e.req) for w in windows for e in w})
-        if not spans:
-            return 0
-        # drain-all guard: when everything queued fits one wave, splitting
-        # it by span class only buys extra prefill waves — take it all
-        if (sum(len(q) for q in self._queues.values()) <= self.n_slots
-                and all(len(q) <= self.lookahead
-                        for q in self._queues.values())):
-            return spans[-1]
-        floor = max((self._span(e.req) for w in windows for e in w
-                     if e.skips >= self.max_skip), default=0)
-        best_t, best_eff = 0, -1.0
-        for t in spans:
-            if t < floor:
-                continue
-            busy, used, pool = 0, 0, []
-            for h, w in zip(self.homes, windows):
-                fits = sorted(self._span(e.req) for e in w
-                              if self._span(e.req) <= t)
-                cap = len(self.slots_of[h])
-                busy += sum(fits[:cap])              # this home's own slots
-                used += min(len(fits), cap)
-                pool += fits[cap:]                   # spill-eligible excess
-            busy += sum(sorted(pool)[:self.n_slots - used])
-            eff = busy / (self.n_slots * t)
-            if eff > best_eff + 1e-12:
-                best_t, best_eff = t, eff
-        return max(best_t, floor)
-
-    def _place(self, placements: List, slot: int, req) -> None:
-        """Admit one request onto one slot: charge the relayout its landing
-        implies (fork vs migrate — see `_charge_move`) and keep the
-        invariant that a request only ever decodes on the home owning its
-        slot."""
-        b = (self._bindings.get(req.session)
-             if req.session is not None else None)
-        migrate = not (b is not None and b.home != req.home
-                       and b.home in self._queues
-                       and any(x.req.session == req.session
-                               for x in self._queues[b.home]))
-        self._charge_move(req, req.home, migrate=migrate)
-        assert self.owners[slot] == req.home         # the invariant
-        placements.append((slot, req))
-
     def form_wave(self, now: float) -> List[Tuple[int, object]]:
         """One wave-boundary batch: ``[(slot, request), ...]`` placements.
 
@@ -329,88 +636,35 @@ class Scheduler:
         caller serves the wave and then reports it back via `complete`.
         """
         self._admit(now)
-        self._wave_sites = {}      # cache copies are per-wave materialised
-        if self.policy == "fifo":
-            wave = []
-            while self._fifo and len(wave) < self.n_slots:
-                req = self._fifo.popleft().req
-                slot = len(wave)                 # whatever slot frees first
-                req.home = self.owners[slot]
-                self._charge_move(req, req.home)
-                wave.append((slot, req))
-            self._record_admission(wave, now)
-            return wave
-
-        placements: List[Tuple[int, object]] = []
-        free: Dict[int, List[int]] = {h: list(self.slots_of[h])
-                                      for h in self.homes}
-        target = self._pick_target()
-        if target == 0:
-            self._record_admission(placements, now)
-            return placements
-        # 2. fill: each home admits from its own queue, front first (bounded
-        # lookahead), every entry whose span fits the target — which
-        # `_pick_target` already raised above every aged entry's span, so
-        # nothing admissible can outgrow the wave mid-fill
-        for h in self.homes:
-            q = self._queues[h]
-            kept: List[_Entry] = []
-            scanned = 0
-            while q and free[h] and scanned < self.lookahead:
-                e = q.popleft()
-                scanned += 1
-                if self._span(e.req) <= target:
-                    self._place(placements, free[h].pop(0), e.req)
+        pre_homes = {b.session: b.home for b in self.state.bindings}
+        self.state, placements, charges = form_wave_t(self.cfg, self.state)
+        for c in charges.moves:
+            if c.nbytes:
+                self.stats.relayout_bytes += c.nbytes
+                self.stats.relayout_events += 1
+                self.stats.homes[c.dst].relayout_bytes += c.nbytes
+                if c.inter_pod:
+                    self.stats.inter_pod_bytes += c.nbytes
                 else:
-                    e.skips += 1
-                    kept.append(e)
-            for e in reversed(kept):
-                q.appendleft(e)
-        # 3. spill: idle capacity pulls fitting work from other queues —
-        # work conservation over strict affinity.  Donor choice minimises
-        # the relayout it causes: unbound (or already-here) sessions move
-        # free, bound ones cost their cached tokens; same-pod donors break
-        # ties so a spill crosses DCN only when ICI has nothing to give.
-        for h in self.homes:
-            while free[h]:
-                pick = None
-                for d in self.homes:
-                    if d == h:
-                        continue
-                    for i, e in enumerate(list(self._queues[d])
-                                          [:self.lookahead]):
-                        if self._span(e.req) > target:
-                            continue
-                        b = (self._bindings.get(e.req.session)
-                             if e.req.session is not None else None)
-                        cost = (0 if b is None or b.home == h
-                                or h in self._wave_sites.get(e.req.session,
-                                                             ())
-                                else b.tokens)
-                        key = (cost, self._pod(d) != self._pod(h),
-                               -len(self._queues[d]), d, i)
-                        if pick is None or key < pick[0]:
-                            pick = (key, d, i)
-                if pick is None:
-                    break
-                _, d, i = pick
-                q = self._queues[d]
-                q.rotate(-i)
-                e = q.popleft()
-                q.rotate(i)
-                e.req.home = h
-                self.stats.homes[d].spilled_out += 1
-                self.stats.homes[h].spilled_in += 1
-                self._place(placements, free[h].pop(0), e.req)
-        placements.sort()
-        self._record_admission(placements, now)
-        return placements
-
-    def _record_admission(self, placements, now: float) -> None:
-        for _slot, req in placements:
+                    self.stats.intra_pod_bytes += c.nbytes
+        wave = []
+        for p in placements:
+            req = self._reqs.pop(p.rid)
+            req.home = p.home
+            req._sched_uid = p.rid          # complete() keys forked by it
+            if p.spilled_from is not None:
+                self.stats.homes[p.spilled_from].spilled_out += 1
+                self.stats.homes[p.home].spilled_in += 1
+            elif (self.cfg.policy == "homed"
+                  and pre_homes.get(req.session) == p.home):
+                self.stats.affinity_hits += 1
+            wave.append((p.slot, req))
+        wave.sort(key=lambda sr: sr[0])
+        for _slot, req in wave:
             req.wait = now - float(getattr(req, "t_arrive", 0.0))
             self.stats.waits.append(req.wait)
             self.stats.homes[req.home].admitted += 1
+        return wave
 
     # ------------------------------------------------------------ completion
     def complete(self, placements, now: float, steps: float) -> None:
@@ -418,37 +672,21 @@ class Scheduler:
         self.stats.waves += 1
         self.stats.steps += steps
         self.stats.slot_steps += self.n_slots * steps
+        served = []
         for _slot, req in placements:
             self.stats.served += 1
             self.stats.tokens_out += len(req.out)
             self.stats.busy_slot_steps += len(req.prompt) + len(req.out)
-            if req.session is None:
-                continue
-            if id(req) in self._forked:
-                # a spill copy: the canonical cache never left its home
-                self._forked.discard(id(req))
-                b = self._bindings.get(req.session)
-                if b is not None:
-                    b.last_used = now
-                continue
-            self._bindings[req.session] = _Binding(
-                home=req.home, tokens=len(req.prompt) + len(req.out),
-                last_used=now)
-            self._evict(req.home, now)
-
-    def _evict(self, home: int, now: float) -> None:
-        """Per-home LRU compaction: drop, never migrate, over-capacity
-        bindings — a cached session leaves its home only by being freed."""
-        mine = [(s, b) for s, b in self._bindings.items() if b.home == home]
-        while len(mine) > self.session_capacity:
-            mine.sort(key=lambda sb: sb[1].last_used)
-            s, _ = mine.pop(0)
-            del self._bindings[s]
-            self.stats.homes[home].evicted += 1
+            served.append(Served(
+                rid=getattr(req, "_sched_uid", id(req)), session=req.session,
+                home=req.home, tokens=len(req.prompt) + len(req.out)))
+        self.state, evicted = complete_t(self.cfg, self.state, served, now)
+        for b in evicted:
+            self.stats.homes[b.home].evicted += 1
 
     # ------------------------------------------------------------ reporting
     def binding_home(self, session) -> Optional[int]:
-        b = self._bindings.get(session)
+        b = self.state.binding(session)
         return b.home if b is not None else None
 
     def utilisation(self) -> float:
@@ -473,6 +711,7 @@ class Scheduler:
             "inter_pod_bytes": s.inter_pod_bytes,
             "intra_pod_bytes": s.intra_pod_bytes,
             "relayout_events": s.relayout_events,
+            "affinity_hits": s.affinity_hits,
             "per_home": {h: vars(hs).copy() for h, hs in s.homes.items()},
         }
 

@@ -184,6 +184,8 @@ SWEEP = [
     ("flat-new-rules", ["--workload", "sort", "--pods", "1x4",
                         "--policy", "all", "--rules", "R5", "R6", "R7",
                         "R8"]),
+    ("serve-r9r10r11", ["--workload", "serve", "--pods", "1x4",
+                        "--rules", "r9,r10,r11"]),
 ]
 
 
@@ -195,3 +197,6 @@ def test_homecheck_cli_sweep_clean(name, argv):
         env={**os.environ, "PYTHONPATH": "src"})
     assert r.returncode == 0, r.stdout + r.stderr
     assert "0 finding(s), 0 error(s)" in r.stdout, r.stdout
+    if any("r9" in a.lower() for a in argv):
+        # the full-lattice scheduler certificate prints with the sweep
+        assert "R9 certificate [scheduler]" in r.stdout, r.stdout

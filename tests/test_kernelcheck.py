@@ -155,12 +155,13 @@ def test_r6_certificate_covers_every_supported_mesh():
 
 
 def test_normalize_rules():
-    assert normalize_rules(None) == tuple(f"R{i}" for i in range(1, 9))
+    assert normalize_rules(None) == tuple(f"R{i}" for i in range(1, 12))
     assert normalize_rules("all") == normalize_rules(["all"])
     assert normalize_rules(["R5", "r6"]) == ("R5", "R6")
     assert normalize_rules("R5,R8") == ("R5", "R8")
+    assert normalize_rules("r9,r10,r11") == ("R9", "R10", "R11")
     with pytest.raises(ValueError, match="unknown rule"):
-        normalize_rules(["R9"])
+        normalize_rules(["R12"])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,178 @@
+"""schedcheck + livecheck: every R9 mutant fixture is provably flagged
+with its minimal witness trace, the clean scheduler certifies over the
+full small-config lattice, and the R10/R11 known-bad lowered fixtures are
+flagged while real programs run clean (the CLI sweep in test_homecheck.py
+covers the lowered workloads; mirror of the test_kernelcheck.py layout).
+
+Everything here is pure python over the transition functions and HLO-text
+fixtures — no devices, no lowering — so the exhaustive certification runs
+in-process.
+"""
+import dataclasses
+
+import pytest
+
+from repro.analysis.findings import Report, Severity
+from repro.analysis.fixtures import (MUTANT_INVARIANT,
+                                     branch_mismatch_module,
+                                     consistent_branches_module,
+                                     data_dependent_loop_module,
+                                     hbm_hog_module, mutant_scheduler)
+from repro.analysis.hlo_facts import liveness
+from repro.analysis.livecheck import (collective_signature,
+                                      r10_hbm_live_range,
+                                      r11_collective_control_flow)
+from repro.analysis.schedcheck import (DEFAULT_LATTICE, FAST_LATTICE,
+                                       certify, certify_lattice,
+                                       r9_scheduler_certification)
+from repro.launch.hlo_cost import parse_module
+from repro.runtime.scheduler import (MUTATIONS, SchedConfig, Served,
+                                     complete_t, initial_state)
+
+
+# ---------------------------------------------------------------------------
+# R9: the clean scheduler certifies over the FULL small-config lattice
+# ---------------------------------------------------------------------------
+def test_full_lattice_certifies_clean():
+    cert = certify_lattice(DEFAULT_LATTICE)
+    assert set(cert) == {e.name for e in DEFAULT_LATTICE}
+    for name, rec in cert.items():
+        assert rec["witness"] is None, (
+            f"{name}: {rec['witness'].format()}")
+        assert rec["states"] > 0
+    # the per-target fast corner is a strict subset of the certificate
+    assert {e.name for e in FAST_LATTICE} < {e.name for e in DEFAULT_LATTICE}
+    # memoized: the CLI/rule path pays for the exploration once per process
+    assert certify_lattice(DEFAULT_LATTICE) is cert
+
+
+def test_r9_rule_reports_certificate_note():
+    rep = Report(target="r9-clean")
+    r9_scheduler_certification(rep, FAST_LATTICE)
+    assert rep.clean, rep.format()
+    assert any("scheduler certified" in n for n in rep.notes)
+
+
+# ---------------------------------------------------------------------------
+# R9 mutants: each committed known-bad transition variant has a witness
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mutation", MUTATIONS)
+def test_mutant_scheduler_flagged_with_minimal_witness(mutation):
+    entry = mutant_scheduler(mutation)
+    witness, states = certify(entry)
+    assert witness is not None, f"{entry.name}: mutant certified clean"
+    assert witness.invariant == MUTANT_INVARIANT[mutation]
+    assert witness.events, "witness must carry the violating event script"
+    assert witness.config == entry.name
+    formatted = witness.format()
+    assert witness.invariant in formatted and "after [" in formatted
+    assert 0 < states <= 200_000
+
+
+def test_r9_rule_errors_carry_the_witness():
+    rep = Report(target="r9-mutant")
+    r9_scheduler_certification(rep, (mutant_scheduler("drop_charge"),))
+    errs = [f for f in rep.errors if f.rule == "R9"]
+    assert errs, rep.format()
+    assert "I1-uncharged-move" in errs[0].message
+    assert "after [" in errs[0].message        # the event script rides along
+
+
+def test_mutant_scheduler_rejects_unknown_mutation():
+    with pytest.raises(ValueError, match="unknown scheduler mutation"):
+        mutant_scheduler("teleport")
+
+
+# ---------------------------------------------------------------------------
+# the eviction path: one stable sort, oldest-first prefix, never migrates
+# (pins the sort-once complete_t behaviour the R9 audit replays)
+# ---------------------------------------------------------------------------
+def test_complete_t_evicts_lru_prefix_in_one_stable_sort():
+    big = SchedConfig(policy="homed", n_slots=2, owners=(0, 0),
+                      bytes_per_token=2, session_capacity=8)
+    st = initial_state(big)
+    for i, t in enumerate([3.0, 1.0, 4.0, 2.0]):      # scrambled last_used
+        st, ev = complete_t(big, st, [Served(i, f"s{i}", 0, 4)], now=t)
+        assert ev == ()                                # under capacity
+    small = dataclasses.replace(big, session_capacity=2)
+    st, evicted = complete_t(small, st, [Served(9, "new", 0, 4)], now=9.0)
+    # the over-capacity prefix leaves oldest-first, on its own home
+    assert [b.session for b in evicted] == ["s1", "s3", "s0"]
+    assert all(b.home == 0 for b in evicted)
+    assert sorted(b.last_used for b in evicted) == [1.0, 2.0, 3.0]
+
+
+# ---------------------------------------------------------------------------
+# R10: HBM live-range gate — hog fixture flagged, generous ceiling clean
+# ---------------------------------------------------------------------------
+def test_r10_hog_fixture_exceeds_32mib_ceiling():
+    rep = Report(target="r10-hog")
+    r10_hbm_live_range(rep, hbm_hog_module(), ceiling=32 * 2**20)
+    errs = [f for f in rep.errors if f.rule == "R10"]
+    assert errs, rep.format()
+    assert errs[0].actual_bytes == 4 * 16 * 2**20      # all four buffers live
+    assert "per-device ceiling" in errs[0].message
+    assert "largest at peak" in errs[0].message
+
+    rep2 = Report(target="r10-ok")
+    r10_hbm_live_range(rep2, hbm_hog_module(), ceiling=128 * 2**20)
+    assert rep2.clean, rep2.format()
+    assert any("headroom" in n for n in rep2.notes)
+
+
+def test_r10_liveness_scan_facts():
+    live = liveness(hbm_hog_module())
+    assert live["peak_bytes"] == 4 * 16 * 2**20
+    assert live["param_bytes"] == 16 * 2**20
+    assert live["n_buffers"] == 4
+    assert live["live_at_peak"]
+
+
+def test_r10_memory_stats_tightens_the_scan():
+    # compiler-reported stats dominate the syntactic scan when larger
+    stats = {"argument_size_in_bytes": 48 * 2**20,
+             "output_size_in_bytes": 16 * 2**20,
+             "temp_size_in_bytes": 8 * 2**20}
+    rep = Report(target="r10-stats")
+    r10_hbm_live_range(rep, hbm_hog_module(), ceiling=68 * 2**20,
+                       memory_stats=stats)
+    errs = [f for f in rep.errors if f.rule == "R10"]
+    assert errs and errs[0].actual_bytes == 72 * 2**20
+    assert "xla memory_analysis" in errs[0].message
+
+
+# ---------------------------------------------------------------------------
+# R11: collectives under data-dependent control flow
+# ---------------------------------------------------------------------------
+def test_r11_branch_mismatch_is_error():
+    rep = Report(target="r11-mismatch")
+    r11_collective_control_flow(rep, branch_mismatch_module())
+    errs = [f for f in rep.errors if f.rule == "R11"]
+    assert errs, rep.format()
+    assert "differ across branches" in errs[0].message
+    assert "deadlock" in errs[0].message
+
+
+def test_r11_data_dependent_loop_is_warn_not_error():
+    rep = Report(target="r11-loop")
+    r11_collective_control_flow(rep, data_dependent_loop_module())
+    assert not rep.errors, rep.format()
+    warns = [f for f in rep.findings
+             if f.rule == "R11" and f.severity == Severity.WARN]
+    assert warns and "trip count" in warns[0].message
+
+
+def test_r11_consistent_branches_are_clean():
+    rep = Report(target="r11-clean")
+    r11_collective_control_flow(rep, consistent_branches_module())
+    assert rep.clean, rep.format()
+    assert any("collective-control-flow ok" in n for n in rep.notes)
+
+
+def test_collective_signature_orders_kind_and_bytes():
+    comps = parse_module(branch_mismatch_module())
+    branch_sigs = {name: collective_signature(comps, name)
+                   for name in comps if name != "__entry__"}
+    with_ar = [s for s in branch_sigs.values() if s]
+    assert with_ar and with_ar[0][0][0] == "all-reduce"
+    assert with_ar[0][0][1] > 0
