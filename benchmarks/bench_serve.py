@@ -22,10 +22,11 @@ per scheduling policy, on the same model/params/mesh, and reports:
 Every row family is emitted twice: once for the classic mixed stream and
 once with a ``_prefix`` suffix for the *shared-prefix* stream — zipf-skewed
 sessions whose requests all open with that session's sticky prompt prefix.
-Today the prefix rows measure the same scheduler (prefill recomputes the
-prefix); they are the committed acceptance stream the ROADMAP's KV
-prefix-reuse item will be gated on — when prefix pooling lands, these are
-the rows that must move.
+The prefix rows are the paged-KV acceptance stream: every row carries the
+pool's reuse stats (``pages``, ``hits_full``/``hits_part``,
+``rows_saved`` = prefill row-equivalents skipped by attaching pooled
+pages instead of recomputing them), and `compare.py` gates the homed
+``_prefix`` tok/s against the committed baseline.
 
 Decode outputs are bit-identical across policies because the server pads
 every prefill to the fixed ``--prompt-pad`` bucket (row numerics never
@@ -126,6 +127,7 @@ def main(argv=None):
     streams = (("", make_stream), ("_prefix", make_prefix_stream))
     outs = {lbl: {} for lbl, _ in streams}
     stats = {lbl: {} for lbl, _ in streams}
+    rows_saved = {lbl: {} for lbl, _ in streams}
     for policy in ("fifo", "homed"):
         srv = DecodeServer(cfg, params, batch_slots=args.slots,
                            max_len=args.max_len, plan=plan,
@@ -137,12 +139,15 @@ def main(argv=None):
                            max_new=2))
         srv.run()
         from repro.runtime.scheduler import make_scheduler
+        page_kw = dict(page_size=srv.scheduler.page_size,
+                       page_capacity=srv.scheduler.page_capacity)
         for lbl, mk in streams:
             wall_us = float("inf")
             for _ in range(max(1, args.reps)):  # best-of-reps: identical
                 srv.scheduler = make_scheduler(  # deterministic reps, min wall
                     policy, n_slots=srv.B, locale=srv.locale, cfg=cfg,
-                    prompt_pad=args.prompt_pad)
+                    prompt_pad=args.prompt_pad, **page_kw)
+                srv.store.clear()   # pool accounting restarts: content too
                 for r in mk(cfg, args.requests, args.slots,
                             args.prompt_pad, args.sessions,
                             args.short_new, args.long_new, args.seed):
@@ -154,13 +159,18 @@ def main(argv=None):
             s = srv.scheduler.stats
             outs[lbl][policy] = {r.rid: tuple(r.out) for r in served}
             stats[lbl][policy] = s
+            rows_saved[lbl][policy] = srv.scheduler.prefill_rows_saved()
             name = f"serve_{policy}_{tag}{lbl}"
             tok_s = s.tokens_out / (wall_us / 1e6)
             print(f"{name},{wall_us / max(1, s.tokens_out):.0f},"
                   f"tok_s={tok_s:.0f};served={s.served};"
                   f"tokens={s.tokens_out};steps={s.steps:.0f};"
                   f"waves={s.waves};"
-                  f"util={srv.scheduler.utilisation():.3f}")
+                  f"util={srv.scheduler.utilisation():.3f};"
+                  f"pages={s.pages_attached};"
+                  f"hits_full={s.prefix_hits_full};"
+                  f"hits_part={s.prefix_hits_partial};"
+                  f"rows_saved={rows_saved[lbl][policy]:.1f}")
             print(f"{name}_wait,,"
                   f"p50={s.wait_pct(50):.1f};p99={s.wait_pct(99):.1f}")
             print(f"{name}_relayout,,"
@@ -175,7 +185,8 @@ def main(argv=None):
         no_slower = st["homed"].steps <= st["fifo"].steps
         print(f"serve_check_{tag}{lbl},,bit_identical={identical};"
               f"relayout_homed_lt_fifo={fewer};"
-              f"steps_homed_le_fifo={no_slower}")
+              f"steps_homed_le_fifo={no_slower};"
+              f"rows_saved_homed={rows_saved[lbl]['homed']:.1f}")
 
 
 if __name__ == "__main__":

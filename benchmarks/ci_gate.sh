@@ -7,8 +7,15 @@
 # --rules all` over a flat and a hierarchical emulated mesh (the analyzer
 # subprocesses set their own XLA_FLAGS).  `--rules all` is R1-R11: each
 # sweep includes the R9 scheduler certificate over the full small-config
-# lattice and the R10/R11 (HBM live-range, collective control flow)
-# checks on every lowered workload.  It then stamps the combined verdict
+# lattice — now including the paged (page_capacity > 0) and continuous-
+# refill configs, so I8 (page refcounts never leak) is part of the
+# certificate — and the R10/R11 (HBM live-range, collective control
+# flow) checks on every lowered workload.  A dedicated step then proves
+# the certificate has teeth: every committed scheduler mutant (including
+# `leak_page`, which drops a page-refcount release) must be *refuted*
+# with a minimal witness tagged with its invariant — an R9 that stopped
+# catching a known-bad scheduler fails the gate even though every clean
+# sweep still passes.  It then stamps the combined verdict
 # (`"ci_gate": "pass"|"fail"`) into every record of every BENCH_*.json in
 # BENCH_DIR (default: repo root) alongside the existing "homecheck" key —
 # `benchmarks/compare.py` fails a PR whose baseline was "pass" but whose
@@ -29,6 +36,29 @@ python -m repro.launch.homecheck --workload all --pods 1x8 \
 echo "== ci_gate: homecheck --workload all --rules all (hier 2x2x2) =="
 python -m repro.launch.homecheck --workload all --pods 2x2x2 \
     --policy all --rules all || verdict=fail
+
+echo "== ci_gate: R9 mutant refutation (every committed mutant witnessed) =="
+python - <<'EOF' || verdict=fail
+from repro.analysis.fixtures import MUTANT_INVARIANT, mutant_scheduler
+from repro.analysis.schedcheck import certify
+from repro.runtime.scheduler import MUTATIONS
+
+ok = True
+for mutation in MUTATIONS:
+    witness, states = certify(mutant_scheduler(mutation))
+    if witness is None:
+        print(f"R9 mutant NOT refuted: {mutation} certified clean over "
+              f"{states} states — the certificate lost its teeth")
+        ok = False
+    elif witness.invariant != MUTANT_INVARIANT[mutation]:
+        print(f"R9 mutant {mutation}: wrong invariant "
+              f"{witness.invariant} (want {MUTANT_INVARIANT[mutation]}): "
+              f"{witness.format()}")
+        ok = False
+    else:
+        print(f"R9 mutant refuted: {mutation} -> {witness.format()}")
+raise SystemExit(0 if ok else 1)
+EOF
 
 python - "$verdict" "$BENCH_DIR" <<'EOF'
 import glob, json, os, sys

@@ -32,6 +32,13 @@ serving regression exactly like a sort one:
 
     python -m benchmarks.compare BENCH_serve.json /tmp/new/BENCH_serve.json \
         --fail-above 25
+
+The ``_prefix`` family (the shared-prefix paged-KV acceptance stream) is
+additionally gated on its *derived* fields: a ``tok_s`` drop beyond
+``--fail-above`` fails even if the us-per-token row is missing, and a
+baseline with ``rows_saved > 0`` whose candidate stops attaching pages
+(``rows_saved == 0``) fails outright — losing prefix reuse is a
+regression even at equal wall-clock.
 """
 from __future__ import annotations
 
@@ -68,6 +75,46 @@ def check_regressions(base_chk: Dict[str, str], new_chk: Dict[str, str],
     """Cases whose verdict was `ok` in base but is not in new."""
     return {n: new_chk[n] for n in sorted(base_chk.keys() & new_chk.keys())
             if base_chk[n] == ok and new_chk[n] != ok}
+
+
+def load_derived(path: str) -> Dict[str, Dict[str, float]]:
+    """name -> numeric derived fields (``k=v`` pairs, ``;``-separated)."""
+    with open(path) as f:
+        records = json.load(f)
+    out: Dict[str, Dict[str, float]] = {}
+    for r in records:
+        fields = {}
+        for kv in (r.get("derived") or "").split(";"):
+            k, _, v = kv.partition("=")
+            try:
+                fields[k] = float(v)
+            except ValueError:
+                continue
+        if fields:
+            out[r["name"]] = fields
+    return out
+
+
+def prefix_regressions(base: Dict[str, Dict[str, float]],
+                       new: Dict[str, Dict[str, float]],
+                       fail_above: float = None) -> List[str]:
+    """Derived-field gate for the ``_prefix`` serving family: tok/s drops
+    beyond `fail_above` percent and vanished prefix reuse both fail."""
+    bad = []
+    for name in sorted(base.keys() & new.keys()):
+        if "_prefix" not in name:
+            continue
+        b, n = base[name], new[name]
+        if fail_above is not None and b.get("tok_s") and "tok_s" in n:
+            drop = (b["tok_s"] - n["tok_s"]) / b["tok_s"] * 100.0
+            if drop > fail_above:
+                bad.append(f"{name}: tok_s {b['tok_s']:.0f} -> "
+                           f"{n['tok_s']:.0f} ({drop:+.1f}%)")
+        for key in ("rows_saved", "rows_saved_homed"):
+            if b.get(key, 0.0) > 0.0 and n.get(key) == 0.0:
+                bad.append(f"{name}: {key} {b[key]:.1f} -> 0 "
+                           f"(prefix reuse vanished)")
+    return bad
 
 
 def compare(base: Dict[str, float], new: Dict[str, float]) -> List[Dict]:
@@ -112,6 +159,15 @@ def main(argv=None) -> int:
             print(f"# FAIL: {len(dirty)} previously {key}-{ok} case(s) "
                   f"regressed", file=sys.stderr)
             rc = 1
+    prefix_bad = prefix_regressions(load_derived(args.base),
+                                    load_derived(args.new),
+                                    fail_above=args.fail_above)
+    for msg in prefix_bad:
+        print(f"# prefix-regression: {msg}", file=sys.stderr)
+    if prefix_bad:
+        print(f"# FAIL: {len(prefix_bad)} _prefix-family derived "
+              f"regression(s)", file=sys.stderr)
+        rc = 1
     if not rows:
         print("# no common timed cases", file=sys.stderr)
         return rc or 2

@@ -25,6 +25,7 @@ reuse them as regression anchors.
                                "no_aging"     skip aging off  → I2
                                "drop_charge"  charge dropped  → I1
                                "greedy_spill" donor order ignored → I7
+                               "leak_page"    page release dropped → I8
   `hbm_hog_module`         — R10 ERROR (vs. a 32 MiB test ceiling): two
                              16 MiB temporaries and the 16 MiB result all
                              live at the ROOT — 64 MiB peak.
@@ -127,6 +128,7 @@ MUTANT_INVARIANT = {
     "no_aging": "I2-starvation",
     "drop_charge": "I1-uncharged-move",
     "greedy_spill": "I7-spill-order",
+    "leak_page": "I8-page-leak",
 }
 
 #: smallest DEFAULT_LATTICE entry on which each mutation is caught — the
@@ -135,6 +137,7 @@ _MUTANT_ENTRY = {
     "no_aging": "homed-1x2",
     "drop_charge": "homed-2x1",
     "greedy_spill": "homed-2x1",
+    "leak_page": "homed-paged",
 }
 
 

@@ -276,7 +276,10 @@ def check_decode(mesh=None, *, cfg_name: str = "qwen3-0.6b",
         lambda p, t: model.prefill(p, {"tokens": t}, plan, max_len=max_len),
         params, toks)
     batch = {"tokens": jax.ShapeDtypeStruct((batch_slots, 1), jnp.int32)}
-    args = (params, caches, batch, jnp.int32(prompt_len))
+    # per-slot position clocks: the continuous-batching decode step takes
+    # a (batch_slots,) vector, each row at its own position
+    pos = jnp.full((batch_slots,), prompt_len, jnp.int32)
+    args = (params, caches, batch, pos)
     compiled = srv._decode.lower(*args).compile()
     hlo = compiled.as_text()
     jaxpr = jax.make_jaxpr(srv._decode)(*args)

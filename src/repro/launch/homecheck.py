@@ -18,7 +18,7 @@ data-dependent control flow.
 When R6 is active the sweep also prints the repo-wide certificate: every
 supported policy 0-1-certified over every mesh shape up to 16 devices.
 When R9 is active the sweep prints the scheduler certificate: invariants
-I1-I7 proved by exhaustive interleaving search over the full small-config
+I1-I8 proved by exhaustive interleaving search over the full small-config
 lattice (per-target reports run the fast corner; the certificate here is
 the full one).
 ``--pods`` sets ``XLA_FLAGS`` itself, so the command is self-sufficient
@@ -173,7 +173,7 @@ def main(argv=None) -> int:
         else:
             configs = ", ".join(f"{n}({rec['states']})"
                                 for n, rec in cert.items())
-            print(f"R9 certificate [scheduler]: I1-I7 hold over "
+            print(f"R9 certificate [scheduler]: I1-I8 hold over "
                   f"{len(cert)} lattice config(s), {total_states} "
                   f"canonical states explored exhaustively ({configs})")
     if "R6" in rules:

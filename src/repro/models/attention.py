@@ -193,47 +193,70 @@ def chunked_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
     return out.astype(q.dtype)
 
 
+def _rowwise_positions(pos, B: int, Sq: int):
+    """Normalise ``pos`` to a (B, Sq) int32 query-position matrix.
+
+    Accepts the legacy scalar (one shared clock), a (B,) per-row clock
+    (continuous batching: each slot decodes at its own position), or the
+    full (B, Sq) matrix a page-stepped prefill passes."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos, (B, Sq))
+    if pos.ndim == 1:
+        return jnp.broadcast_to(pos[:, None], (B, Sq))
+    return pos
+
+
 def decode_attention(q, cache_k, cache_v, kpos, pos, *, window: int,
                      plan: MeshPlan = None, axes=(None, None),
                      cache_seq_axis=None):
-    """Single-step attention over a (possibly ring-buffered) KV cache.
+    """Attention for Sq new tokens per row over a (ring-buffered) KV cache.
 
-    q: (B, 1, KV, Gq, hd); cache_k/v: (B, Sc, KV, hd); kpos: (Sc,) int32
-    holding the absolute position stored in each slot (-1 == empty);
-    pos: scalar int32 current position.
+    q: (B, Sq, KV, Gq, hd); cache_k/v: (B, Sc, KV, hd); kpos: (B, Sc) or
+    (Sc,) int32 holding the absolute position stored in each cache slot
+    (-1 == empty); pos: scalar, (B,) or (B, Sq) int32 query positions.
+    Per-row masks keep every row's output a function of its own cache
+    alone, so rows at different positions decode in one call.
     """
-    B, _, KV, Gq, hd = q.shape
+    B, Sq, KV, Gq, hd = q.shape
     Sc = cache_k.shape[1]
+    kpos = jnp.asarray(kpos)
+    if kpos.ndim == 1:
+        kpos = jnp.broadcast_to(kpos[None], (B, Sc))
+    pos = _rowwise_positions(pos, B, Sq)
     kv_ax, gq_ax = axes
     b_ax = plan.batch_axes if plan else None
     scale = hd ** -0.5
-    qt = jnp.transpose(q[:, 0], (0, 1, 2, 3))  # (B, KV, Gq, hd)
-    qt = ws(qt, plan, b_ax, kv_ax, gq_ax, None)
-    s = jnp.einsum("bkgd,bskd->bkgs", qt, cache_k,
+    qt = jnp.transpose(q, (0, 2, 3, 1, 4))       # (B, KV, Gq, Sq, hd)
+    qt = ws(qt, plan, b_ax, kv_ax, gq_ax, None, None)
+    s = jnp.einsum("bkgqd,bskd->bkgqs", qt, cache_k,
                    preferred_element_type=jnp.float32) * scale
-    s = ws(s, plan, b_ax, kv_ax, gq_ax, cache_seq_axis)
-    mask = (kpos >= 0) & (kpos <= pos)
+    s = ws(s, plan, b_ax, kv_ax, gq_ax, None, cache_seq_axis)
+    mask = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= pos[:, :, None])
     if window:
-        mask &= (pos - kpos) < window
-    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+        mask &= (pos[:, :, None] - kpos[:, None, :]) < window
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     l = jnp.sum(p, axis=-1, keepdims=True)
-    out = jnp.einsum("bkgs,bskd->bkgd", (p / l).astype(cache_v.dtype), cache_v,
-                     preferred_element_type=jnp.float32)
-    return out.reshape(B, 1, KV * Gq, hd).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", (p / l).astype(cache_v.dtype),
+                     cache_v, preferred_element_type=jnp.float32)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, Sq, KV * Gq, hd)
+    return out.astype(q.dtype)
 
 
 def apply_attention(p, x, *, cfg: ArchConfig, plan: MeshPlan,
                     positions=None, cache: Optional[dict] = None,
                     pos=None, kv_src=None, build_cache: bool = False,
                     cross: bool = False, kv_chunk: int = 1024,
-                    cache_len: Optional[int] = None):
+                    cache_len: Optional[int] = None, write_mask=None):
     """Full attention block body (no residual/norm — the block adds those).
 
     Returns (y, new_cache). `cache` (decode) is a dict {k, v, kpos} for self
     attention or {k, v} for cross attention. `build_cache` (prefill) returns
-    the cache built from this call's K/V.
+    the cache built from this call's K/V. `write_mask` (B, Sq) bool gates
+    which of a decode call's new tokens are committed to the cache (page-
+    stepped prefill: pad rows/positions compute but never write).
     """
     B, Sq, D = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -259,23 +282,41 @@ def apply_attention(p, x, *, cfg: ArchConfig, plan: MeshPlan,
         KVe, Gqe = KV, Gq
         rep = lambda t: t  # noqa: E731
     if cache is not None and not cross:
-        # ---- decode: one new token ----
+        # ---- decode / page-step: Sq new tokens per row, masked ring write
         k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
         v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
         if "k_norm" in p:
             k_new = rmsnorm(k_new, p["k_norm"], cfg.norm_eps)
-        q = rope(q, pos[None].astype(jnp.int32), cfg.rope_theta)
-        k_new = rope(k_new, pos[None].astype(jnp.int32), cfg.rope_theta)
+        pos = _rowwise_positions(pos, B, Sq)
+        q = rope(q, pos, cfg.rope_theta)
+        k_new = rope(k_new, pos, cfg.rope_theta)
         Sc = cache["k"].shape[1]
+        kpos_c = cache["kpos"]
+        if kpos_c.ndim == 1:
+            kpos_c = jnp.broadcast_to(kpos_c[None], (B, Sc))
+        wmask = (jnp.ones((B, Sq), bool) if write_mask is None
+                 else write_mask)
         slot = (pos % Sc).astype(jnp.int32)
-        ck = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                          (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                          (0, slot, 0, 0))
-        kpos = jax.lax.dynamic_update_slice(cache["kpos"], pos[None].astype(jnp.int32),
-                                            (slot,))
+        # masked one-hot scatter instead of dynamic_update_slice: each row
+        # writes its own slot(s), so rows at different positions share one
+        # call and a row's cache never depends on its wave-mates (the bit-
+        # identity contract).  The one-hot multiply-sum hits exactly one
+        # source per written slot (query positions within a call are
+        # distinct), so committed values are written exactly.
+        oh = ((slot[:, :, None] == jnp.arange(Sc)[None, None, :])
+              & wmask[:, :, None])                     # (B, Sq, Sc)
+        written = jnp.any(oh, axis=1)                  # (B, Sc)
+        upd_k = jnp.einsum("bqs,bqkd->bskd", oh.astype(cache["k"].dtype),
+                           k_new.astype(cache["k"].dtype))
+        upd_v = jnp.einsum("bqs,bqkd->bskd", oh.astype(cache["v"].dtype),
+                           v_new.astype(cache["v"].dtype))
+        ck = jnp.where(written[:, :, None, None], upd_k, cache["k"])
+        cv = jnp.where(written[:, :, None, None], upd_v, cache["v"])
+        kpos = jnp.where(written,
+                         jnp.einsum("bqs,bq->bs", oh.astype(jnp.int32), pos),
+                         kpos_c)
         new_cache = {"k": ck, "v": cv, "kpos": kpos}
-        out = decode_attention(q.reshape(B, 1, KVe, Gqe, hd), rep(ck), rep(cv),
+        out = decode_attention(q.reshape(B, Sq, KVe, Gqe, hd), rep(ck), rep(cv),
                                kpos, pos, window=W, plan=plan, axes=axes,
                                cache_seq_axis=plan.cache_seq_axis if plan else None)
     elif cache is not None and cross:
@@ -321,6 +362,9 @@ def apply_attention(p, x, *, cfg: ArchConfig, plan: MeshPlan,
                     ck = jnp.pad(ck, padw)
                     cv = jnp.pad(cv, padw)
                     kp = jnp.pad(kp, (0, Sc - keep), constant_values=-1)
+                # per-row kpos: decode is per-slot-clocked, so each row
+                # carries its own occupancy map from here on
+                kp = jnp.broadcast_to(kp[None], (B, Sc))
                 new_cache = {"k": ck, "v": cv, "kpos": kp}
 
     out = ws(out, plan, b_ax, None, axes[0] or axes[1], None)

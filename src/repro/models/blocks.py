@@ -140,14 +140,18 @@ def apply_stack(stack, x, *, cfg: ArchConfig, plan: MeshPlan,
 # ---------------------------------------------------------------------------
 # decode (one token, cache/state update)
 # ---------------------------------------------------------------------------
-def _decode_member(p, spec: MemberSpec, x, cache, pos, *, cfg, plan):
+def _decode_member(p, spec: MemberSpec, x, cache, pos, *, cfg, plan,
+                   write_mask=None):
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if spec.mixer == "mamba":
+        if x.shape[1] != 1:
+            raise ValueError("mamba decode is strictly sequential: "
+                             f"one token per call, got {x.shape[1]}")
         mix, new_cache = decode_mamba(p["mamba"], h, cache, cfg, plan)
     else:
         mix, new_cache = apply_attention(
             p["attn"], h, cfg=cfg, plan=plan, cache=cache, pos=pos,
-            cross=(spec.mixer == "cross"))
+            cross=(spec.mixer == "cross"), write_mask=write_mask)
     x = x + mix
     if spec.ffn != "none":
         h = rmsnorm(x, p["ln2"], cfg.norm_eps)
@@ -159,8 +163,12 @@ def _decode_member(p, spec: MemberSpec, x, cache, pos, *, cfg, plan):
     return x, new_cache
 
 
-def decode_stack(stack, caches, x, pos, *, cfg: ArchConfig, plan: MeshPlan):
-    """x: (B,1,D); caches: pytree with leading superblock axis."""
+def decode_stack(stack, caches, x, pos, *, cfg: ArchConfig, plan: MeshPlan,
+                 write_mask=None):
+    """x: (B,S,D); caches: pytree with leading superblock axis.
+
+    ``pos`` is a scalar, (B,) or (B,S) int32 of absolute query positions
+    (per-slot clocks); ``write_mask`` (B,S) bool gates cache commits."""
     members = superblock_spec(cfg)
 
     def body(carry, xs):
@@ -169,7 +177,8 @@ def decode_stack(stack, caches, x, pos, *, cfg: ArchConfig, plan: MeshPlan):
         new_caches = {}
         for i, m in enumerate(members):
             x, c = _decode_member(sb_params[f"m{i}"], m, x, sb_cache[f"m{i}"],
-                                  pos, cfg=cfg, plan=plan)
+                                  pos, cfg=cfg, plan=plan,
+                                  write_mask=write_mask)
             new_caches[f"m{i}"] = c
         return x, new_caches
 

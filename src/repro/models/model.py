@@ -75,7 +75,9 @@ class LM:
         return logits[:, -1], caches
 
     def decode_step(self, params, caches, batch, pos, plan: MeshPlan = NULL_PLAN):
-        """One token for the whole batch at scalar position `pos`."""
+        """One token per row; ``pos`` is a scalar (one shared clock) or a
+        (B,) int32 vector of per-slot position clocks (continuous
+        batching: each row decodes at its own position)."""
         cfg = self.cfg
         if cfg.embed_input:
             x = jnp.take(params["embed"]["tok_embed"], batch["tokens"], axis=0)
@@ -86,6 +88,29 @@ class LM:
                                             cfg=cfg, plan=plan)
         logits = self._head(params, x, plan)
         return logits[:, 0], new_caches
+
+    def decode_pages(self, params, caches, batch, positions, write_mask,
+                     plan: MeshPlan = NULL_PLAN):
+        """Page-stepped prefill: S new tokens per row written into the
+        decode cache at ``positions`` (B, S), cache commits gated by
+        ``write_mask`` (B, S) — pad positions and non-refilling rows
+        compute but never write.  Page p of a row attends only to cache
+        entries at positions < its own, so a page's K/V content is a pure
+        function of the row's earlier pages: computed and pool-attached
+        pages are interchangeable bit-for-bit.  Attention-only stacks
+        (no sequential SSM state) support this path.  Returns
+        (logits (B, S, Vp), caches')."""
+        cfg = self.cfg
+        if cfg.embed_input:
+            x = jnp.take(params["embed"]["tok_embed"], batch["tokens"], axis=0)
+            x = x.astype(jnp.dtype(cfg.dtype))
+        else:
+            x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        x, new_caches = blocks.decode_stack(params["stack"], caches, x,
+                                            positions, cfg=cfg, plan=plan,
+                                            write_mask=write_mask)
+        logits = self._head(params, x, plan)
+        return logits, new_caches
 
     # ----------------------------------------------------------------- cache
     def init_cache(self, batch_size: int, max_len: int, img_len: int = 0):
@@ -114,7 +139,7 @@ class LM:
                         "kpos": jnp.zeros((nsb, n), jnp.int32)}
             return {"k": jnp.zeros((nsb, batch_size, Sc, KV, hd), dtype),
                     "v": jnp.zeros((nsb, batch_size, Sc, KV, hd), dtype),
-                    "kpos": jnp.full((nsb, Sc), -1, jnp.int32)}
+                    "kpos": jnp.full((nsb, batch_size, Sc), -1, jnp.int32)}
 
         return {f"m{i}": member_cache(m) for i, m in enumerate(members)}
 

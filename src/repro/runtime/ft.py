@@ -17,6 +17,32 @@ from dataclasses import dataclass
 from typing import List, Optional
 
 
+def evacuate_home(scheduler, home: Optional[int] = None,
+                  store=None) -> dict:
+    """Serving-side device-loss/drain hook: drop one home's pooled prompt
+    pages (every home when ``home`` is None) and the host-side content
+    backing them.
+
+    This is the paged-KV analogue of the kill -9 -> relaunch path below:
+    the pool state is *accounting*, not truth — in-flight requests hold
+    private copies of everything they attached, so they finish untouched
+    and their completion-time release finds nothing to unpin (tolerated
+    by `kvpool.release`, never a refcount crash).  What the evacuation
+    does change is the future: the affected sessions' next requests find
+    no pooled prefix and re-enter as fresh, *charged* prefills — the cost
+    of the loss is paid visibly, in the same relayout ledger as every
+    other cross-home byte.
+    """
+    dropped = scheduler.invalidate_pages(home)
+    pruned = 0
+    if store is not None:
+        homes = scheduler.homes if home is None else [home]
+        for h in homes:
+            pruned += store.prune(h, scheduler.pool_keys(h))
+    return {"home": home, "pages_dropped": dropped,
+            "content_pruned": pruned}
+
+
 @dataclass
 class Supervisor:
     cmd: List[str]

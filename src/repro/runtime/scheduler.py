@@ -71,11 +71,14 @@ from typing import (Dict, FrozenSet, List, NamedTuple, Optional, Sequence,
 
 import numpy as np
 
+from repro.runtime import kvpool
+from repro.runtime.kvpool import Page
+
 POLICIES = ("fifo", "homed")
 
 # known-bad transition variants `analysis/fixtures.py` commits for R9;
 # every name here must make `schedcheck.certify` produce a witness
-MUTATIONS = ("no_aging", "drop_charge", "greedy_spill")
+MUTATIONS = ("no_aging", "drop_charge", "greedy_spill", "leak_page")
 
 
 def kv_bytes_per_token(cfg) -> int:
@@ -102,10 +105,15 @@ class ReqInfo(NamedTuple):
     counter); ``span`` is the slot occupancy in wave steps — with a fixed
     server pad bucket every wave prefills ``prompt_pad`` rows regardless
     of the admitted prompts, so the span that predicts wave cost uses the
-    bucket, not the raw prompt length."""
+    bucket, not the raw prompt length.
+
+    ``blocks`` is the prompt's cacheable page-key chain
+    (`kvpool.prompt_blocks`) when the server runs a paged pool, else
+    empty — the radix key the wave uses for prefix attach."""
     rid: object
     span: int
     session: object = None
+    blocks: Tuple = ()
 
 
 class QEntry(NamedTuple):
@@ -124,11 +132,14 @@ class Binding(NamedTuple):
 class Placement(NamedTuple):
     """One admitted request: decodes on ``home`` (which owns ``slot``);
     ``spilled_from`` names the donor queue when work conservation pulled
-    it across homes, else None."""
+    it across homes, else None.  ``attached`` counts the leading prompt
+    pages the home's pool already held at wave start — prefill compute
+    the server skips by attaching pooled KV instead of recomputing."""
     slot: int
     rid: object
     home: int
     spilled_from: Optional[int] = None
+    attached: int = 0
 
 
 class Charge(NamedTuple):
@@ -170,6 +181,7 @@ class SchedConfig:
     homes_per_pod: Optional[int] = None
     session_capacity: int = 4
     affinity_slack: int = 2
+    page_capacity: int = 0       # pooled KV pages per home; 0 = no pool
     mutations: FrozenSet[str] = frozenset()
 
     @property
@@ -195,16 +207,25 @@ class SchedState:
     the session table in *insertion order* (dict semantics: an update
     keeps its slot, a new binding appends) because LRU eviction ties on
     ``last_used`` break by that order; ``forked`` holds rids of in-flight
-    spill copies that must not rebind at completion."""
+    spill copies that must not rebind at completion; ``pools`` maps
+    home -> its paged-KV pool (`kvpool.Page` tuples) when the config
+    runs one (``page_capacity > 0``)."""
     queues: Tuple[Tuple[int, Tuple[QEntry, ...]], ...] = ()
     fifo: Tuple[ReqInfo, ...] = ()
     bindings: Tuple[Binding, ...] = ()
     forked: FrozenSet[object] = frozenset()
+    pools: Tuple[Tuple[int, Tuple[Page, ...]], ...] = ()
 
     def queue(self, home: int) -> Tuple[QEntry, ...]:
         for h, q in self.queues:
             if h == home:
                 return q
+        return ()
+
+    def pool(self, home: int) -> Tuple[Page, ...]:
+        for h, p in self.pools:
+            if h == home:
+                return p
         return ()
 
     def binding(self, session) -> Optional[Binding]:
@@ -221,7 +242,10 @@ class SchedState:
 
 
 def initial_state(cfg: SchedConfig) -> SchedState:
-    return SchedState(queues=tuple((h, ()) for h in cfg.homes))
+    pools = tuple((h, ()) for h in cfg.homes) if cfg.page_capacity > 0 \
+        else ()
+    return SchedState(queues=tuple((h, ()) for h in cfg.homes),
+                      pools=pools)
 
 
 def _queues_dict(state: SchedState) -> Dict[int, List[QEntry]]:
@@ -232,12 +256,17 @@ def _bindings_dict(state: SchedState) -> Dict[object, Binding]:
     return {b.session: b for b in state.bindings}
 
 
+def _pools_dict(state: SchedState) -> Dict[int, Tuple[Page, ...]]:
+    return {h: p for h, p in state.pools}
+
+
 def _pack(queues: Dict[int, List[QEntry]], fifo: List[ReqInfo],
-          bindings: Dict[object, Binding],
-          forked: FrozenSet[object]) -> SchedState:
+          bindings: Dict[object, Binding], forked: FrozenSet[object],
+          pools: Dict[int, Tuple[Page, ...]]) -> SchedState:
     return SchedState(
         queues=tuple((h, tuple(q)) for h, q in queues.items()),
-        fifo=tuple(fifo), bindings=tuple(bindings.values()), forked=forked)
+        fifo=tuple(fifo), bindings=tuple(bindings.values()), forked=forked,
+        pools=tuple((h, tuple(p)) for h, p in pools.items()))
 
 
 def route_t(cfg: SchedConfig, state: SchedState,
@@ -248,7 +277,8 @@ def route_t(cfg: SchedConfig, state: SchedState,
     relief valve); an unbound request always balances."""
     if cfg.policy == "fifo":
         return _pack(_queues_dict(state), list(state.fifo) + [req],
-                     _bindings_dict(state), state.forked), -1
+                     _bindings_dict(state), state.forked,
+                     _pools_dict(state)), -1
     queues = _queues_dict(state)
     b = state.binding(req.session)
     least = min(cfg.homes, key=lambda h: (len(queues[h]), h))
@@ -262,20 +292,45 @@ def route_t(cfg: SchedConfig, state: SchedState,
         home = least
     queues[home].append(QEntry(req))
     return _pack(queues, list(state.fifo), _bindings_dict(state),
-                 state.forked), home
+                 state.forked, _pools_dict(state)), home
 
 
 class _WaveCtx:
     """Mutable scratch shared by one `form_wave_t` call: the evolving
-    binding table, the per-wave cache-copy sites, and the move record."""
+    binding table, the per-wave cache-copy sites, the per-home page
+    pools, and the move record."""
 
-    def __init__(self, cfg: SchedConfig, state: SchedState):
+    def __init__(self, cfg: SchedConfig, state: SchedState,
+                 now: float = 0.0):
         self.cfg = cfg
+        self.now = now
         self.bindings = _bindings_dict(state)
         self.forked = set(state.forked)
         self.sites: Dict[object, set] = {}   # session -> homes holding a
         #   copy of its cache *this wave* (a second request reuses it free)
         self.moves: List[Charge] = []
+        self.pools = _pools_dict(state)
+        # the attachable key set is frozen at wave start: a page a wave-
+        # mate inserts *this wave* is refcount-shared but its content is
+        # not in the home's store yet, so it cannot be attached
+        self.known = {h: frozenset(pg.key for pg in p)
+                      for h, p in self.pools.items()}
+
+    def attach_pages(self, req: ReqInfo, home: int) -> int:
+        """Pin ``req``'s block chain into ``home``'s pool; returns the
+        attachable longest-prefix hit.  Attach never crosses homes: the
+        only pool consulted is the landing home's own — a prefix cached
+        elsewhere is invisible here and gets recomputed (or the session
+        pays the fork/migrate charge that brought it, which `charge_move`
+        already recorded)."""
+        if not req.blocks or self.cfg.page_capacity <= 0:
+            return 0
+        pages, hit = kvpool.acquire(
+            tuple(self.pools.get(home, ())), req.blocks,
+            self.cfg.page_capacity, self.now,
+            self.known.get(home, frozenset()))
+        self.pools[home] = pages
+        return hit
 
     def charge_move(self, req: ReqInfo, new_home: int,
                     migrate: bool = True) -> None:
@@ -307,28 +362,29 @@ class _WaveCtx:
             self.forked.add(req.rid)        # one-way copy; don't rebind
 
 
-def _pick_target(cfg: SchedConfig,
-                 queues: Dict[int, List[QEntry]]) -> Tuple[int, int]:
+def _pick_target(cfg: SchedConfig, queues: Dict[int, List[QEntry]],
+                 free_of: Dict[int, List[int]]) -> Tuple[int, int]:
     """The wave's step target: the span that maximises slot utilisation.
 
     Candidate targets are the distinct spans visible in the per-home
     lookahead windows; for each, the admissible work is every windowed
-    entry fitting it (slot-capped per home, spill-eligible across
-    homes), and the wave utilisation is that work over the capacity the
-    wave would offer (``n_slots * target``).  Short decodes therefore
-    batch with short decodes instead of padlocking behind a long one —
-    but an *aged* entry (skipped ``max_skip`` waves) bounds staleness
-    by forcing the target up to its own span.  Returns ``(target,
-    floor)``; target 0 = nothing queued.
+    entry fitting it (capped by the *free* slots per home — under
+    continuous batching a wave refills only the slots that drained —
+    spill-eligible across homes), and the wave utilisation is that work
+    over the capacity the wave would offer (``free * target``).  Short
+    decodes therefore batch with short decodes instead of padlocking
+    behind a long one — but an *aged* entry (skipped ``max_skip`` waves)
+    bounds staleness by forcing the target up to its own span.  Returns
+    ``(target, floor)``; target 0 = nothing queued.
     """
-    slots_of = cfg.slots_of
+    n_free = sum(len(s) for s in free_of.values())
     windows = [queues[h][:cfg.lookahead] for h in cfg.homes]
     spans = sorted({e.req.span for w in windows for e in w})
-    if not spans:
+    if not spans or n_free == 0:
         return 0, 0
     # drain-all guard: when everything queued fits one wave, splitting
     # it by span class only buys extra prefill waves — take it all
-    if (sum(len(q) for q in queues.values()) <= cfg.n_slots
+    if (sum(len(q) for q in queues.values()) <= n_free
             and all(len(q) <= cfg.lookahead for q in queues.values())):
         return spans[-1], 0
     floor = 0 if "no_aging" in cfg.mutations else \
@@ -341,12 +397,12 @@ def _pick_target(cfg: SchedConfig,
         busy, used, pool = 0, 0, []
         for h, w in zip(cfg.homes, windows):
             fits = sorted(e.req.span for e in w if e.req.span <= t)
-            cap = len(slots_of[h])
+            cap = len(free_of.get(h, ()))
             busy += sum(fits[:cap])              # this home's own slots
             used += min(len(fits), cap)
             pool += fits[cap:]                   # spill-eligible excess
-        busy += sum(sorted(pool)[:cfg.n_slots - used])
-        eff = busy / (cfg.n_slots * t)
+        busy += sum(sorted(pool)[:n_free - used])
+        eff = busy / (n_free * t)
         if eff > best_eff + 1e-12:
             best_t, best_eff = t, eff
     return max(best_t, floor), floor
@@ -356,9 +412,9 @@ def _place(ctx: _WaveCtx, queues: Dict[int, List[QEntry]],
            placements: List[Placement], slot: int, req: ReqInfo,
            home: int, spilled_from: Optional[int] = None) -> None:
     """Admit one request onto one slot: charge the relayout its landing
-    implies (fork vs migrate — see `_WaveCtx.charge_move`) and keep the
-    invariant that a request only ever decodes on the home owning its
-    slot."""
+    implies (fork vs migrate — see `_WaveCtx.charge_move`), pin its
+    prompt pages into the landing home's pool, and keep the invariant
+    that a request only ever decodes on the home owning its slot."""
     b = ctx.bindings.get(req.session) if req.session is not None else None
     migrate = not (b is not None and b.home != home
                    and b.home in queues
@@ -366,38 +422,64 @@ def _place(ctx: _WaveCtx, queues: Dict[int, List[QEntry]],
                            for x in queues[b.home]))
     ctx.charge_move(req, home, migrate=migrate)
     assert ctx.cfg.owners[slot] == home          # the invariant
-    placements.append(Placement(slot, req.rid, home, spilled_from))
+    attached = ctx.attach_pages(req, home)
+    placements.append(Placement(slot, req.rid, home, spilled_from,
+                                attached))
 
 
-def form_wave_t(cfg: SchedConfig, state: SchedState
+def form_wave_t(cfg: SchedConfig, state: SchedState,
+                free: Optional[Sequence[int]] = None, now: float = 0.0
                 ) -> Tuple[SchedState, Tuple[Placement, ...], Charges]:
     """One wave-boundary batch, purely: ``(state', placements, charges)``.
+
+    ``free`` is the set of slot indices available this wave — ``None``
+    means all of them (the legacy whole-wave boundary); under continuous
+    batching the server passes just the slots whose requests drained, so
+    a freed slot refills mid-wave while its neighbours keep decoding.
 
     Placements come back in *decision order* (fill before spill) so a
     checker can replay them against the pre-wave queues; the shell sorts
     by slot before reporting.  Every placement decodes on the home that
-    owns its slot, and every cache byte the decisions move is a `Charge`
-    in ``charges.moves`` — the complete accounting record.
+    owns its slot, every cache byte the decisions move is a `Charge` in
+    ``charges.moves``, and every prompt page a placement pins into its
+    home's pool is refcounted in ``state'.pools`` — the complete
+    accounting record.
     """
+    free_slots = sorted(range(cfg.n_slots) if free is None else free)
     if cfg.policy == "fifo":
-        ctx = _WaveCtx(cfg, state)
+        ctx = _WaveCtx(cfg, state, now)
         fifo = list(state.fifo)
         placements: List[Placement] = []
-        while fifo and len(placements) < cfg.n_slots:
+        for slot in free_slots:                  # whatever slot frees first
+            if not fifo:
+                break
             req = fifo.pop(0)
-            slot = len(placements)               # whatever slot frees first
             ctx.charge_move(req, cfg.owners[slot])
-            placements.append(Placement(slot, req.rid, cfg.owners[slot]))
+            attached = ctx.attach_pages(req, cfg.owners[slot])
+            placements.append(Placement(slot, req.rid, cfg.owners[slot],
+                                        None, attached))
         return (_pack(_queues_dict(state), fifo, ctx.bindings,
-                      frozenset(ctx.forked)),
+                      frozenset(ctx.forked), ctx.pools),
                 tuple(placements), Charges(tuple(ctx.moves), 0, 0))
 
-    ctx = _WaveCtx(cfg, state)
+    ctx = _WaveCtx(cfg, state, now)
     queues = _queues_dict(state)
     placements = []
-    free: Dict[int, List[int]] = {h: list(s)
-                                  for h, s in cfg.slots_of.items()}
-    target, floor = _pick_target(cfg, queues)
+    free_set = set(free_slots)
+    free_of: Dict[int, List[int]] = {
+        h: [s for s in slots if s in free_set]
+        for h, slots in cfg.slots_of.items()}
+    if free is not None:
+        # continuous refill: per-slot position clocks removed the
+        # alignment constraint, so span classes no longer gate admission
+        # — any queued span can take any free slot without padlocking
+        # its neighbours.  Admit front-first; locality still decides
+        # *where* (fill own home, then charged spill).
+        windows = [queues[h][:cfg.lookahead] for h in cfg.homes]
+        target = max((e.req.span for w in windows for e in w), default=0)
+        floor = 0
+    else:
+        target, floor = _pick_target(cfg, queues, free_of)
     if target == 0:
         return state, (), Charges((), 0, floor)
     # 2. fill: each home admits from its own queue, front first (bounded
@@ -408,11 +490,12 @@ def form_wave_t(cfg: SchedConfig, state: SchedState
         q = queues[h]
         kept: List[QEntry] = []
         scanned = 0
-        while q and free[h] and scanned < cfg.lookahead:
+        while q and free_of[h] and scanned < cfg.lookahead:
             e = q.pop(0)
             scanned += 1
             if e.req.span <= target:
-                _place(ctx, queues, placements, free[h].pop(0), e.req, h)
+                _place(ctx, queues, placements, free_of[h].pop(0), e.req,
+                       h)
             else:
                 kept.append(e._replace(skips=e.skips + 1))
         q[:0] = kept
@@ -423,7 +506,7 @@ def form_wave_t(cfg: SchedConfig, state: SchedState
     # ties so a spill crosses DCN only when ICI has nothing to give.
     greedy = "greedy_spill" in cfg.mutations
     for h in cfg.homes:
-        while free[h]:
+        while free_of[h]:
             pick = None
             for d in cfg.homes:
                 if d == h:
@@ -446,32 +529,41 @@ def form_wave_t(cfg: SchedConfig, state: SchedState
                 break
             _, d, i = pick
             e = queues[d].pop(i)
-            _place(ctx, queues, placements, free[h].pop(0), e.req, h,
+            _place(ctx, queues, placements, free_of[h].pop(0), e.req, h,
                    spilled_from=d)
     return (_pack(queues, list(state.fifo), ctx.bindings,
-                  frozenset(ctx.forked)),
+                  frozenset(ctx.forked), ctx.pools),
             tuple(placements), Charges(tuple(ctx.moves), target, floor))
 
 
 class Served(NamedTuple):
-    """What completion reports per request: its final cached size."""
+    """What completion reports per request: its final cached size and
+    the prompt-page chain it pinned at formation (released here)."""
     rid: object
     session: object
     home: int
     tokens: int
+    blocks: Tuple = ()
 
 
 def complete_t(cfg: SchedConfig, state: SchedState,
                served: Sequence[Served], now: float
                ) -> Tuple[SchedState, Tuple[Binding, ...]]:
-    """Rebind completed sessions (LRU-touch fork copies instead) and run
-    per-home LRU compaction: returns ``(state', evicted_bindings)``.
-    Evicted bindings are *dropped on their own home*, never migrated —
-    a cached session leaves its home only by being freed."""
+    """Rebind completed sessions (LRU-touch fork copies instead), release
+    the page refcounts formation acquired, and run per-home LRU
+    compaction: returns ``(state', evicted_bindings)``.  Evicted bindings
+    are *dropped on their own home*, never migrated — a cached session
+    leaves its home only by being freed."""
     bindings = _bindings_dict(state)
     forked = set(state.forked)
+    pools = _pools_dict(state)
     evicted: List[Binding] = []
     for sv in served:
+        # unpin the prompt pages this request held in flight (absent keys
+        # tolerated: a mid-flight invalidation already dropped them)
+        if sv.blocks and sv.home in pools \
+                and "leak_page" not in cfg.mutations:
+            pools[sv.home] = kvpool.release(pools[sv.home], sv.blocks, now)
         if sv.session is None:
             continue
         if sv.rid in forked:
@@ -491,7 +583,7 @@ def complete_t(cfg: SchedConfig, state: SchedState,
                 del bindings[b.session]
                 evicted.append(b)
     return _pack(_queues_dict(state), list(state.fifo), bindings,
-                 frozenset(forked)), tuple(evicted)
+                 frozenset(forked), pools), tuple(evicted)
 
 
 # ---------------------------------------------------------------------------
@@ -522,6 +614,9 @@ class ScheduleStats:
     served: int = 0
     tokens_out: int = 0
     affinity_hits: int = 0       # placements landing on the session's home
+    pages_attached: int = 0      # pooled prompt pages reused (prefill skipped)
+    prefix_hits_full: int = 0    # placements attaching their whole chain
+    prefix_hits_partial: int = 0 # placements attaching a proper prefix
 
     def wait_pct(self, q: float) -> float:
         if not self.waits:
@@ -550,7 +645,8 @@ class Scheduler:
                  homes_per_pod: Optional[int] = None,
                  session_capacity: Optional[int] = None,
                  affinity_slack: Optional[int] = None,
-                 prompt_pad: Optional[int] = None):
+                 prompt_pad: Optional[int] = None,
+                 page_size: int = 0, page_capacity: int = 0):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; want one of "
                              f"{POLICIES}")
@@ -558,6 +654,8 @@ class Scheduler:
         if len(owners) != n_slots:
             raise ValueError(f"owners maps {len(owners)} slots, server has "
                              f"{n_slots}")
+        if page_capacity > 0 and page_size <= 0:
+            raise ValueError("page_capacity needs a positive page_size")
         sph = max(len(v) for v in SchedConfig(owners=owners).slots_of
                   .values())
         self.cfg = SchedConfig(
@@ -570,8 +668,10 @@ class Scheduler:
             # this many entries past the least-loaded one (the hot-home
             # relief valve)
             affinity_slack=(affinity_slack if affinity_slack is not None
-                            else 2 * sph))
+                            else 2 * sph),
+            page_capacity=page_capacity)
         self.prompt_pad = prompt_pad     # the server's fixed prefill bucket
+        self.page_size = page_size       # tokens per pooled KV page
         self.state = initial_state(self.cfg)
         self._future: List[Tuple[float, int, object]] = []   # arrival heap
         self._seq = 0
@@ -591,6 +691,7 @@ class Scheduler:
     session_capacity = property(lambda self: self.cfg.session_capacity)
     affinity_slack = property(lambda self: self.cfg.affinity_slack)
     slots_of = property(lambda self: self.cfg.slots_of)
+    page_capacity = property(lambda self: self.cfg.page_capacity)
 
     @property
     def homes(self) -> List[int]:
@@ -621,23 +722,32 @@ class Scheduler:
         while self._future and self._future[0][0] <= now:
             _, _, req = heapq.heappop(self._future)
             uid, self._uid = self._uid, self._uid + 1
+            blocks = (kvpool.prompt_blocks(req.prompt, self.page_size)
+                      if self.cfg.page_capacity > 0 else ())
             info = ReqInfo(rid=uid, span=self._span(req),
-                           session=req.session)
+                           session=req.session, blocks=blocks)
+            req._sched_blocks = blocks
             self._reqs[uid] = req
             self.state, home = route_t(self.cfg, self.state, info)
             if home >= 0:
                 req.home = home
 
     # ------------------------------------------------------------ formation
-    def form_wave(self, now: float) -> List[Tuple[int, object]]:
+    def form_wave(self, now: float,
+                  free_slots: Optional[Sequence[int]] = None
+                  ) -> List[Tuple[int, object]]:
         """One wave-boundary batch: ``[(slot, request), ...]`` placements.
 
-        Every returned request decodes on the home that owns its slot; the
-        caller serves the wave and then reports it back via `complete`.
+        ``free_slots`` restricts the wave to the slots that actually
+        drained (continuous batching); ``None`` offers every slot — the
+        legacy whole-wave boundary.  Every returned request decodes on
+        the home that owns its slot; the caller serves the wave and then
+        reports it back via `complete`.
         """
         self._admit(now)
         pre_homes = {b.session: b.home for b in self.state.bindings}
-        self.state, placements, charges = form_wave_t(self.cfg, self.state)
+        self.state, placements, charges = form_wave_t(
+            self.cfg, self.state, free=free_slots, now=now)
         for c in charges.moves:
             if c.nbytes:
                 self.stats.relayout_bytes += c.nbytes
@@ -652,6 +762,14 @@ class Scheduler:
             req = self._reqs.pop(p.rid)
             req.home = p.home
             req._sched_uid = p.rid          # complete() keys forked by it
+            req._attached = p.attached      # pages the server may attach
+            nblk = len(getattr(req, "_sched_blocks", ()))
+            if p.attached:
+                self.stats.pages_attached += p.attached
+                if p.attached == nblk:
+                    self.stats.prefix_hits_full += 1
+                else:
+                    self.stats.prefix_hits_partial += 1
             if p.spilled_from is not None:
                 self.stats.homes[p.spilled_from].spilled_out += 1
                 self.stats.homes[p.home].spilled_in += 1
@@ -660,6 +778,8 @@ class Scheduler:
                 self.stats.affinity_hits += 1
             wave.append((p.slot, req))
         wave.sort(key=lambda sr: sr[0])
+        if wave:
+            self.stats.waves += 1
         for _slot, req in wave:
             req.wait = now - float(getattr(req, "t_arrive", 0.0))
             self.stats.waits.append(req.wait)
@@ -667,11 +787,20 @@ class Scheduler:
         return wave
 
     # ------------------------------------------------------------ completion
-    def complete(self, placements, now: float, steps: float) -> None:
-        """Report a served wave: update stats and session bindings (LRU)."""
-        self.stats.waves += 1
-        self.stats.steps += steps
-        self.stats.slot_steps += self.n_slots * steps
+    def tick(self, units: float) -> None:
+        """Account wave-cost units as they happen (continuous batching:
+        there is no single per-wave cost — prefill page levels and decode
+        steps interleave across refills)."""
+        self.stats.steps += units
+        self.stats.slot_steps += self.n_slots * units
+
+    def complete(self, placements, now: float, steps: float = 0.0) -> None:
+        """Report served requests: update stats, session bindings (LRU)
+        and page refcounts.  ``steps`` adds a whole-wave cost for legacy
+        callers; continuous servers account costs via `tick` and complete
+        requests as their slots drain (possibly a subset of a wave)."""
+        if steps:
+            self.tick(steps)
         served = []
         for _slot, req in placements:
             self.stats.served += 1
@@ -679,10 +808,35 @@ class Scheduler:
             self.stats.busy_slot_steps += len(req.prompt) + len(req.out)
             served.append(Served(
                 rid=getattr(req, "_sched_uid", id(req)), session=req.session,
-                home=req.home, tokens=len(req.prompt) + len(req.out)))
+                home=req.home, tokens=len(req.prompt) + len(req.out),
+                blocks=getattr(req, "_sched_blocks", ())))
         self.state, evicted = complete_t(self.cfg, self.state, served, now)
         for b in evicted:
             self.stats.homes[b.home].evicted += 1
+
+    # ------------------------------------------------------------ page pool
+    def pool_keys(self, home: int) -> List[object]:
+        """The block keys ``home``'s pool currently holds (server pruning)."""
+        return [p.key for p in self.state.pool(home)]
+
+    def invalidate_pages(self, home: Optional[int] = None) -> int:
+        """Force-drop pooled pages (all homes when ``home`` is None)
+        regardless of refcounts — the fleet-reliability path after a home
+        loses its device state.  In-flight requests finish on their
+        private cache copies (their later release is tolerated); the
+        session's next request re-enters as a fresh, charged prefill.
+        Returns the number of pages dropped."""
+        pools = _pools_dict(self.state)
+        dropped = 0
+        for h in list(pools):
+            if home is not None and h != home:
+                continue
+            dropped += len(pools[h])
+            pools[h] = kvpool.invalidate(pools[h])
+        self.state = _pack(_queues_dict(self.state), list(self.state.fifo),
+                           _bindings_dict(self.state), self.state.forked,
+                           pools)
+        return dropped
 
     # ------------------------------------------------------------ reporting
     def binding_home(self, session) -> Optional[int]:
@@ -693,6 +847,14 @@ class Scheduler:
         if not self.stats.slot_steps:
             return 0.0
         return self.stats.busy_slot_steps / self.stats.slot_steps
+
+    def prefill_rows_saved(self) -> float:
+        """Prefill compute avoided by page attach, in the bench's row
+        units: one 'row' = one request's ``prompt_pad``-token prefill, so
+        attached pages convert at ``page_size / prompt_pad`` rows each."""
+        if not self.prompt_pad or not self.page_size:
+            return 0.0
+        return self.stats.pages_attached * self.page_size / self.prompt_pad
 
     def summary(self) -> Dict:
         s = self.stats
@@ -712,6 +874,10 @@ class Scheduler:
             "intra_pod_bytes": s.intra_pod_bytes,
             "relayout_events": s.relayout_events,
             "affinity_hits": s.affinity_hits,
+            "pages_attached": s.pages_attached,
+            "prefix_hits_full": s.prefix_hits_full,
+            "prefix_hits_partial": s.prefix_hits_partial,
+            "prefill_rows_saved": round(self.prefill_rows_saved(), 2),
             "per_home": {h: vars(hs).copy() for h, hs in s.homes.items()},
         }
 
@@ -735,6 +901,12 @@ class Scheduler:
             f"wait_p50={s.wait_pct(50):.1f} wait_p99={s.wait_pct(99):.1f} "
             f"relayout={s.relayout_bytes}B "
             f"(inter_pod={s.inter_pod_bytes}B intra_pod={s.intra_pod_bytes}B)")
+        if self.cfg.page_capacity:
+            lines.append(
+                f"# pages_attached={s.pages_attached} "
+                f"prefix_hits={s.prefix_hits_full}full/"
+                f"{s.prefix_hits_partial}partial "
+                f"prefill_rows_saved={self.prefill_rows_saved():.1f}")
         return "\n".join(lines)
 
 

@@ -1,9 +1,8 @@
-"""Batched decode server: fixed-slot continuous batching over decode_step.
+"""Batched decode server: continuous batching over per-slot position clocks.
 
 Requests queue up; whenever slots free (EOS/max-len), queued prompts are
-prefilled into the freed slots at the next wave boundary. All active slots
-share the decode position clock (aligned batching); per-slot masks retire
-finished sequences. The KV cache is donated across steps (free-asap).
+prefilled into the freed slots. The KV cache is donated across steps
+(free-asap).
 
 Cache placement goes through the same `Locale` API as every other workload:
 each request's KV-cache slot is homed chunk-contiguously over the batch-slot
@@ -14,30 +13,47 @@ serving state.
 
 *Which* request lands on which slot is the scheduler's decision
 (`repro.runtime.scheduler`): ``scheduler="fifo"`` is the arrival-order
-oracle (today's behaviour — a wave is the first B queued requests),
+oracle (a freed slot takes the head of one global queue),
 ``scheduler="homed"`` routes/batches/evicts by the slot ownership map
 `Locale.owners` so a request only ever decodes on its assigned home.
 
-``prompt_pad`` fixes the prefill left-pad length for every wave (instead
-of the per-wave max).  With a fixed pad, each batch row's tokens occupy
-the same positions regardless of which other requests share the wave, and
-rows never mix in the model — so decode outputs are bit-identical across
-scheduling policies for the same request set (the fifo-vs-homed oracle
-check), at the cost of prefilling the pad bucket.  ``prompt_pad=None``
-keeps the per-wave-max behaviour.
+Two serving modes, picked at construction:
+
+**paged / continuous** (``prompt_pad`` set, attention-only stack, no
+sliding window) — prompts are *right*-padded into a fixed bucket, so row
+r's tokens sit at positions ``[0, plen)`` no matter which requests share
+the batch, and every row decodes at its own position clock (a ``(B,)``
+vector): a freed slot refills mid-wave while its neighbours keep
+decoding.  Prefill runs page-stepped (``page_size`` tokens per jitted
+call), which is what lets a prompt's leading pages be *attached* from the
+home's paged KV pool (`repro.runtime.kvpool`) instead of recomputed when
+a home-resident prefix matches — the radix prefix-reuse path.  Each
+row's numerics are a pure function of its own prompt (the fixed bucket
+keeps them composition-independent), so decode outputs are bit-identical
+across scheduling policies for the same request set, whatever their
+prefix-hit patterns.
+
+**aligned waves** (everything else) — the legacy mode: a wave of slots is
+prefilled together (left-padded to ``prompt_pad`` or the wave max) and
+all active slots share one decode position clock; per-slot masks retire
+finished sequences.  Architectures with sequential state (SSM/hybrid
+members, sliding windows) serve here.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.api import Locale
+from repro.models.blocks import superblock_spec
 from repro.models.model import LM
+from repro.runtime.kvpool import PageStore
 from repro.runtime.scheduler import Scheduler, make_scheduler
 from repro.sharding.partition import MeshPlan, NULL_PLAN
 
@@ -60,7 +76,9 @@ class DecodeServer:
                  max_len: int = 128, plan: MeshPlan = NULL_PLAN,
                  greedy: bool = True, locale: Optional[Locale] = None,
                  scheduler: Union[str, Scheduler] = "fifo",
-                 prompt_pad: Optional[int] = None):
+                 prompt_pad: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 page_capacity: Optional[int] = None):
         assert cfg.embed_input, "server serves token LMs"
         self.cfg, self.params, self.plan = cfg, params, plan
         self.B, self.max_len = batch_slots, max_len
@@ -78,14 +96,40 @@ class DecodeServer:
             locale = (Locale(mesh=plan.mesh, axis=slot_axes)
                       if slot_axes else Locale(mesh=None))
         self.locale = locale
+
+        # the paged/continuous mode needs position-pure rows: a fixed
+        # right-pad bucket, no sequential member state (mamba), and no
+        # ring-wrapped window (a page's cache slot must be its position)
+        self.paged = (prompt_pad is not None
+                      and all(m.mixer == "attn" for m in superblock_spec(cfg))
+                      and not cfg.sliding_window)
         if isinstance(scheduler, str):
-            scheduler = make_scheduler(scheduler, n_slots=self.B,
-                                       locale=self.locale, cfg=cfg,
-                                       prompt_pad=prompt_pad)
+            ps = page_size if page_size is not None else \
+                (min(4, prompt_pad) if self.paged else 0)
+            if self.paged and page_capacity is None:
+                # per home: enough pages for session_capacity resident
+                # prefix chains — the same 4x-slots-per-home sizing as the
+                # binding table, and comfortably inside the R10 decode
+                # HBM headroom (pages are prompt-prefix KV already priced
+                # by kv_bytes_per_token)
+                owners = locale.owners(self.B)
+                sph = max(owners.count(h) for h in set(owners))
+                page_capacity = 4 * sph * max(1, (prompt_pad - 1) // ps)
+            scheduler = make_scheduler(
+                scheduler, n_slots=self.B, locale=self.locale, cfg=cfg,
+                prompt_pad=prompt_pad, page_size=ps if self.paged else 0,
+                page_capacity=page_capacity if self.paged else 0)
         if scheduler.n_slots != self.B:
             raise ValueError(f"scheduler manages {scheduler.n_slots} slots, "
                              f"server has {self.B}")
+        if scheduler.page_capacity > 0 and not self.paged:
+            raise ValueError(
+                "a paged KV pool needs prompt_pad and an attention-only, "
+                "non-sliding-window stack")
         self.scheduler = scheduler
+        self.page_size = (scheduler.page_size if scheduler.page_size
+                          else (min(4, prompt_pad) if self.paged else 0))
+        self.store = PageStore()     # host-side page content, keyed by home
 
         def _step(p, c, b, pos):
             logits, c2 = self.model.decode_step(p, c, b, pos, plan)
@@ -95,7 +139,60 @@ class DecodeServer:
             return logits, c2
 
         self._decode = self.locale.jit(_step, donate=(1,))
+        if self.paged:
+            self._build_paged_steps()
 
+    # ------------------------------------------------------------ paged jits
+    def _build_paged_steps(self):
+        ps, plan = self.page_size, self.plan
+
+        def _page(p, c, toks, positions, wmask):
+            logits, c2 = self.model.decode_pages(
+                p, c, {"tokens": toks}, positions, wmask, plan)
+            c2 = self.locale.pin_tree(c2, dim=1, size=toks.shape[0])
+            return logits, c2
+
+        def _reset(c, mask):
+            # wipe refilled rows' attention timelines: kpos (nsb, B, Sc)
+            # back to -1 so stale entries from the slot's previous tenant
+            # never pass the kpos>=0 mask
+            def f(leaf):
+                if leaf.ndim == 3 and leaf.dtype == jnp.int32:
+                    return jnp.where(mask[None, :, None], jnp.int32(-1),
+                                     leaf)
+                return leaf
+            return jax.tree.map(f, c)
+
+        def _attach(c, kb, vb, mask, p0):
+            # splice one pooled page level into the refilled rows' caches:
+            # rows in ``mask`` take kb/vb content (and positions
+            # p0..p0+ps) at cache slots [p0, p0+ps) — everyone else keeps
+            # their own cache untouched
+            out = {}
+            pos_vals = p0 + jnp.arange(ps, dtype=jnp.int32)
+            for m, sub in c.items():
+                k, v, kp = sub["k"], sub["v"], sub["kpos"]
+                curk = jax.lax.dynamic_slice_in_dim(k, p0, ps, axis=2)
+                newk = jnp.where(mask[None, :, None, None, None], kb[m],
+                                 curk)
+                k = jax.lax.dynamic_update_slice_in_dim(k, newk, p0, axis=2)
+                curv = jax.lax.dynamic_slice_in_dim(v, p0, ps, axis=2)
+                newv = jnp.where(mask[None, :, None, None, None], vb[m],
+                                 curv)
+                v = jax.lax.dynamic_update_slice_in_dim(v, newv, p0, axis=2)
+                curp = jax.lax.dynamic_slice_in_dim(kp, p0, ps, axis=2)
+                newp = jnp.where(mask[None, :, None], pos_vals[None, None],
+                                 curp)
+                kp = jax.lax.dynamic_update_slice_in_dim(kp, newp, p0,
+                                                         axis=2)
+                out[m] = {"k": k, "v": v, "kpos": kp}
+            return self.locale.pin_tree(out, dim=1, size=mask.shape[0])
+
+        self._page = self.locale.jit(_page, donate=(1,))
+        self._reset = self.locale.jit(_reset, donate=(0,))
+        self._attach = self.locale.jit(_attach, donate=(0,))
+
+    # ------------------------------------------------------------ submission
     def submit(self, req: Request):
         if self.prompt_pad is not None and len(req.prompt) > self.prompt_pad:
             raise ValueError(
@@ -103,6 +200,7 @@ class DecodeServer:
                 f"prompt_pad={self.prompt_pad}")
         self.scheduler.submit(req)
 
+    # ------------------------------------------------- legacy aligned waves
     def _serve_wave(self, placements) -> Tuple[List[Request], float]:
         """Serve one aligned wave of slot-placed requests.
 
@@ -151,14 +249,7 @@ class DecodeServer:
             r.done = True
         return active, float(plen + steps)
 
-    def run(self) -> List[Request]:
-        """Drain the queues in slot-sized waves (continuous re-batching).
-
-        The scheduler decides wave membership and slot placement; the
-        simulated clock advances by each wave's step cost, so open-loop
-        arrivals (``Request.t_arrive``) and admission waits are measured in
-        the same deterministic units across policies.
-        """
+    def _run_waves(self) -> List[Request]:
         served: List[Request] = []
         sch = self.scheduler
         now = 0.0
@@ -172,3 +263,181 @@ class DecodeServer:
             now += cost
             served += reqs
         return served
+
+    # --------------------------------------------------- paged / continuous
+    def _refill(self, wave, slots, caches, pos_np, cur_np, now):
+        """Prefill freshly placed requests into their (freed) slots while
+        the other rows' caches ride along untouched.
+
+        Per row: reset its attention timeline, *attach* the leading
+        prompt pages its home's pool already holds (splice pooled KV —
+        no compute), then run the remaining pages through the page-
+        stepped prefill (`LM.decode_pages`), committing KV only for this
+        wave's rows at their own positions.  Newly pooled blocks have
+        their computed content extracted into the host `PageStore` so
+        later waves can attach them.  Returns (caches, cost_units).
+        """
+        sch, ps, B = self.scheduler, self.page_size, self.B
+        rows = [slot for slot, _ in wave]
+        for slot, r in wave:
+            slots[slot] = r
+        rmask = np.zeros((B,), bool)
+        rmask[rows] = True
+        caches = self._reset(caches, jnp.asarray(rmask))
+
+        plen = {s: len(r.prompt) for s, r in wave}
+        blocks = {s: getattr(r, "_sched_blocks", ()) for s, r in wave}
+        # attachable = the scheduler's pre-wave longest-prefix hit, capped
+        # by what the content store actually holds (a mid-flight
+        # invalidation may have raced the accounting — recompute instead
+        # of trusting a stale attach)
+        att = {}
+        for s, r in wave:
+            n = 0
+            while (n < getattr(r, "_attached", 0)
+                   and self.store.has(r.home, blocks[s][n])):
+                n += 1
+            att[s] = n
+
+        # 1. attach pooled page levels (no compute, no cost)
+        max_att = max(att.values(), default=0)
+        dtype = jnp.dtype(self.cfg.dtype)
+        members = [f"m{i}" for i in range(len(superblock_spec(self.cfg)))]
+        struct = self.model.cache_struct(B, self.max_len)
+        for p in range(max_att):
+            lv = [s for s, _ in wave if att[s] > p]
+            if not lv:
+                continue
+            kb = {m: np.zeros(
+                (struct[m]["k"].shape[0], B, ps) + struct[m]["k"].shape[3:],
+                dtype) for m in members}
+            vb = {m: np.zeros_like(kb[m]) for m in members}
+            amask = np.zeros((B,), bool)
+            for s in lv:
+                content = self.store.get(slots[s].home, blocks[s][p])
+                amask[s] = True
+                for m in members:
+                    kb[m][:, s], vb[m][:, s] = content[m]
+            caches = self._attach(
+                caches, {m: jnp.asarray(kb[m]) for m in members},
+                {m: jnp.asarray(vb[m]) for m in members},
+                jnp.asarray(amask), jnp.int32(p * ps))
+
+        # 2. page-stepped prefill for everything not attached
+        cost = 0.0
+        lastlv = {s: (plen[s] - 1) // ps for s, _ in wave}
+        level_logits: Dict[int, np.ndarray] = {}
+        for p in range(max(lastlv.values()) + 1):
+            lv = [s for s, _ in wave if att[s] <= p <= lastlv[s]]
+            if not lv:
+                continue
+            toks = np.zeros((B, ps), np.int32)
+            wm = np.zeros((B, ps), bool)
+            for s in lv:
+                chunk = slots[s].prompt[p * ps:(p + 1) * ps]
+                toks[s, :len(chunk)] = chunk
+                wm[s, :len(chunk)] = True
+            positions = np.broadcast_to(
+                p * ps + np.arange(ps, dtype=np.int32), (B, ps))
+            logits, caches = self._page(
+                self.params, caches, jnp.asarray(toks),
+                jnp.asarray(positions), jnp.asarray(wm))
+            cost += float(ps)
+            if any(lastlv[s] == p for s in lv):
+                level_logits[p] = np.asarray(logits)
+
+        # 3. first sampled token + per-slot clock start
+        for s, r in wave:
+            off = (plen[s] - 1) - lastlv[s] * ps
+            first = int(np.argmax(level_logits[lastlv[s]][s, off]))
+            r.out.append(first)
+            cur_np[s] = first
+            pos_np[s] = plen[s]
+
+        # 4. publish newly pooled blocks' computed content to the store
+        live = {h: set(sch.pool_keys(h)) for h in sch.homes}
+        for s, r in wave:
+            for i in range(att[s], len(blocks[s])):
+                key = blocks[s][i]
+                if key not in live.get(r.home, ()) \
+                        or self.store.has(r.home, key):
+                    continue
+                content = {}
+                for m in members:
+                    content[m] = (
+                        np.asarray(caches[m]["k"][:, s, i * ps:(i + 1) * ps]),
+                        np.asarray(caches[m]["v"][:, s, i * ps:(i + 1) * ps]))
+                self.store.put(r.home, key, content)
+        return caches, cost
+
+    def _run_paged(self) -> List[Request]:
+        """Continuous batching: per-slot position clocks, mid-wave refill.
+
+        One loop iteration = (refill any freed slots) + (one decode step
+        for every occupied slot).  Inactive rows carry a dummy token at a
+        stale clock — their writes are row-local and wiped at refill, so
+        no active row ever observes them.
+        """
+        served: List[Request] = []
+        sch, B = self.scheduler, self.B
+        slots: List[Optional[Request]] = [None] * B
+        caches = None
+        pos_np = np.zeros((B,), np.int32)
+        cur_np = np.zeros((B,), np.int32)
+        now = 0.0
+        while sch.has_work() or any(r is not None for r in slots):
+            free = [i for i, r in enumerate(slots) if r is None]
+            occupied = any(r is not None for r in slots)
+            if free and sch.has_work():
+                if not occupied:
+                    now = sch.clock(now)     # idle: jump to next arrival
+                wave = sch.form_wave(now, free_slots=free)
+                if wave:
+                    if caches is None:
+                        caches = self.locale.pin_tree(
+                            self.model.init_cache(B, self.max_len),
+                            dim=1, size=B)
+                    caches, cost = self._refill(wave, slots, caches,
+                                                pos_np, cur_np, now)
+                    sch.tick(cost)
+                    now += cost
+                elif not occupied:
+                    continue                 # future arrivals only — retry
+            if not any(r is not None for r in slots):
+                continue
+            batch = {"tokens": jnp.asarray(cur_np[:, None])}
+            logits, caches = self._decode(self.params, caches, batch,
+                                          jnp.asarray(pos_np))
+            cur_np = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+            pos_np = pos_np + 1
+            sch.tick(1.0)
+            now += 1.0
+            done_now = []
+            for s, r in enumerate(slots):
+                if r is None:
+                    continue
+                if len(r.out) < r.max_new:
+                    r.out.append(int(cur_np[s]))
+                if len(r.out) >= r.max_new or int(pos_np[s]) >= self.max_len:
+                    r.done = True
+                    done_now.append((s, r))
+                    slots[s] = None
+            if done_now:
+                sch.complete(done_now, now)
+                served += [r for _, r in done_now]
+                for h in sch.homes:          # eviction frees host bytes too
+                    self.store.prune(h, sch.pool_keys(h))
+        return served
+
+    def run(self) -> List[Request]:
+        """Drain the queues (continuous batching when the config supports
+        it, aligned waves otherwise).
+
+        The scheduler decides wave membership and slot placement; the
+        simulated clock advances by each step's cost, so open-loop
+        arrivals (``Request.t_arrive``) and admission waits are measured in
+        the same deterministic units across policies.
+        """
+        if self.paged:
+            return self._run_paged()
+        return self._run_waves()

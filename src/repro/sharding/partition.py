@@ -200,7 +200,9 @@ def cache_specs(cache_struct, plan: MeshPlan, cfg: ArchConfig):
             s_ax = None if is_cross else cseq
             return P(None, b, s_ax, kv, None)
         if name == "kpos":
-            return P(None, cseq)
+            # self-attn kpos is per-row (nsb, B, Sc) since the per-slot
+            # position clocks; cross kpos stays shared (nsb, n_img)
+            return P(None, b, cseq) if nd == 3 else P(None, cseq)
         if name == "ssm":
             return P(None, b, hs_ax, None, None)
         if name == "conv_x":

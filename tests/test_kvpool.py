@@ -1,0 +1,229 @@
+"""Paged KV pool tests: pure accounting properties plus the scheduler /
+fleet-reliability interplay.
+
+The pool is pure Python over immutable tuples, so the property tests run
+randomized sequences of acquire/release/invalidate against brute-force
+oracles — no jax, no devices.  The end-to-end bit-identity of *attached*
+pages vs computed ones is pinned by the server tests in
+tests/test_scheduler.py; here we prove the accounting layer those tests
+ride on.
+"""
+import numpy as np
+import pytest
+
+from repro.runtime import ft, kvpool
+from repro.runtime.kvpool import PageStore
+from repro.runtime.scheduler import Scheduler
+from repro.runtime.server import Request
+
+
+def blocks_of(prompt, ps):
+    return kvpool.prompt_blocks(prompt, ps)
+
+
+# ---------------------------------------------------------------------------
+# block-chain construction
+# ---------------------------------------------------------------------------
+def test_prompt_blocks_cover_only_full_pages_before_the_last_token():
+    # 9 tokens, page 4: pages [0:4) and [4:8) are closed; the page holding
+    # token 8 (the last prompt token) is still being written -> excluded
+    p = list(range(1, 10))
+    b = blocks_of(p, 4)
+    assert b == (tuple(p[:4]), tuple(p[:8]))
+    # exact multiple: the final page holds the last token -> excluded too
+    assert blocks_of(p[:8], 4) == (tuple(p[:4]),)
+    assert blocks_of(p[:4], 4) == ()
+    assert blocks_of([], 4) == () and blocks_of(p, 0) == ()
+
+
+def test_block_keys_are_radix_prefixes():
+    # equal leading tokens => equal leading keys; divergence at token i
+    # changes every key from the page containing i onward (COW property)
+    a = blocks_of([1, 2, 3, 4, 5, 6, 7, 8, 9], 2)
+    b = blocks_of([1, 2, 3, 4, 9, 6, 7, 8, 9], 2)
+    assert a[:2] == b[:2]            # pages before the divergence shared
+    assert all(x != y for x, y in zip(a[2:], b[2:]))  # never alias after
+
+
+# ---------------------------------------------------------------------------
+# longest-prefix lookup vs a brute-force oracle
+# ---------------------------------------------------------------------------
+def test_lookup_matches_bruteforce_oracle():
+    rng = np.random.RandomState(0)
+    for _ in range(200):
+        plen = rng.randint(1, 17)
+        prompt = rng.randint(1, 4, size=plen).tolist()
+        chain = blocks_of(prompt, 2)
+        # a pool holding random keys drawn from several prompts' chains
+        pool_keys = set()
+        for _ in range(rng.randint(0, 4)):
+            other = rng.randint(1, 4, size=rng.randint(1, 17)).tolist()
+            ob = blocks_of(other, 2)
+            pool_keys |= set(ob[:rng.randint(0, len(ob) + 1)])
+        pages = tuple(kvpool.Page(k, 0, 0.0) for k in sorted(pool_keys))
+        want = 0
+        while want < len(chain) and chain[want] in pool_keys:
+            want += 1
+        assert kvpool.lookup(pages, chain) == want
+
+
+# ---------------------------------------------------------------------------
+# refcount balance under random acquire/release/invalidate
+# ---------------------------------------------------------------------------
+def test_refcount_balance_property():
+    rng = np.random.RandomState(1)
+    for trial in range(50):
+        capacity = int(rng.randint(1, 9))
+        pages = ()
+        inflight = []                     # chains acquired, not yet released
+        now = 0.0
+        for step in range(60):
+            now += 1.0
+            op = rng.rand()
+            if op < 0.5 or not inflight:
+                prompt = rng.randint(1, 4, size=rng.randint(1, 13)).tolist()
+                chain = blocks_of(prompt, 2)
+                pages, hit = kvpool.acquire(pages, chain, capacity, now)
+                assert 0 <= hit <= len(chain)
+                inflight.append(chain)
+            elif op < 0.9:
+                chain = inflight.pop(rng.randint(len(inflight)))
+                pages = kvpool.release(pages, chain, now)
+            else:
+                pages = kvpool.invalidate(pages)   # device-loss: refs wiped
+                # in-flight requests keep private copies; their later
+                # release must be tolerated (checked when they pop above)
+            # invariants at every step
+            assert len(pages) <= capacity
+            keys = [p.key for p in pages]
+            assert len(keys) == len(set(keys)), "duplicate pooled key"
+            assert all(p.refs >= 0 for p in pages)
+            # every ref is owned by an in-flight chain
+            owned = {}
+            for chain in inflight:
+                for k in chain:
+                    owned[k] = owned.get(k, 0) + 1
+            for p in pages:
+                assert p.refs <= owned.get(p.key, 0), (
+                    f"trial {trial} step {step}: page {p.key} holds "
+                    f"{p.refs} refs, only {owned.get(p.key, 0)} in flight")
+        # quiescence: releasing everything leaves zero refs everywhere
+        for chain in inflight:
+            now += 1.0
+            pages = kvpool.release(pages, chain, now)
+        assert all(p.refs == 0 for p in pages)
+
+
+def test_acquire_evicts_lru_unreferenced_and_pins_full():
+    ps = 2
+    a, b, c = blocks_of([1, 1, 9], ps), blocks_of([2, 2, 9], ps), \
+        blocks_of([3, 3, 9], ps)
+    pages, _ = kvpool.acquire((), a, 2, now=1.0)
+    pages, _ = kvpool.acquire(pages, b, 2, now=2.0)
+    # both pinned: c cannot insert (pool pinned full) — not a crash
+    pages, hit = kvpool.acquire(pages, c, 2, now=3.0)
+    assert hit == 0 and {p.key for p in pages} == {a[0], b[0]}
+    pages = kvpool.release(pages, c, now=3.5)     # absent key tolerated
+    # free a: now the LRU unreferenced page (a) is evicted for c
+    pages = kvpool.release(pages, a, now=4.0)
+    pages = kvpool.release(pages, b, now=5.0)
+    pages, _ = kvpool.acquire(pages, c, 2, now=6.0)
+    assert {p.key for p in pages} == {b[0], c[0]}
+
+
+# ---------------------------------------------------------------------------
+# PageStore pruning follows the accounting layer
+# ---------------------------------------------------------------------------
+def test_pagestore_prunes_to_live_keys():
+    st = PageStore()
+    st.put(0, "k1", "c1"), st.put(0, "k2", "c2"), st.put(1, "k1", "x")
+    assert st.has(0, "k1") and st.get(0, "k2") == "c2"
+    assert st.prune(0, ["k2"]) == 1           # k1 dead on home 0
+    assert not st.has(0, "k1") and st.has(0, "k2")
+    assert st.has(1, "k1"), "homes are independent"
+    st.clear()
+    assert not st.has(1, "k1")
+
+
+# ---------------------------------------------------------------------------
+# scheduler interplay: mid-flight invalidation is the ft path, not a crash
+# ---------------------------------------------------------------------------
+def _sched(**kw):
+    base = dict(n_slots=2, owners=(0, 1), policy="homed", prompt_pad=8,
+                page_size=2, page_capacity=8)
+    base.update(kw)
+    return Scheduler(**base)
+
+
+def _req(rid, session, plen=7):
+    return Request(rid=rid, prompt=np.arange(plen, dtype=np.int32) % 5 + 1,
+                   max_new=2, session=session, t_arrive=0.0)
+
+
+def test_evacuation_mid_flight_then_fresh_charged_prefill():
+    sch = _sched(bytes_per_token=2)
+    store = PageStore()
+    r1 = _req(0, "sA")
+    sch.submit(r1)
+    wave = sch.form_wave(0.0)
+    assert len(wave) == 1
+    home = wave[0][1].home
+    assert len(sch.pool_keys(home)) == 3      # (7-1)//2 pages pinned
+    store.put(home, sch.pool_keys(home)[0], "content")
+
+    # the home dies mid-flight: pages dropped regardless of refcounts
+    rec = ft.evacuate_home(sch, home, store=store)
+    assert rec["pages_dropped"] == 3 and rec["content_pruned"] == 1
+    assert sch.pool_keys(home) == [] and not store.has(
+        home, sch.pool_keys(home)[0] if sch.pool_keys(home) else "k")
+
+    # completing the in-flight request releases nothing — and must not
+    # crash or drive a refcount negative
+    r1.out = [1, 2]
+    sch.complete(wave, now=1.0)
+    assert sch.pool_keys(home) == []
+
+    # the session returns: no pooled prefix -> zero pages attached, a
+    # fresh prefill (and its affinity/relayout accounting is unchanged)
+    r2 = _req(1, "sA")
+    sch.submit(r2)
+    wave2 = sch.form_wave(2.0)
+    assert len(wave2) == 1
+    assert wave2[0][1]._attached == 0
+    assert sch.stats.pages_attached == 0
+    r2.out = [1, 2]
+    sch.complete(wave2, now=3.0)
+    # quiescent: the re-pinned chain is back to refs 0, pool consistent
+    assert all(p.refs == 0 for h in sch.homes for p in sch.state.pool(h))
+
+
+def test_returning_session_attaches_without_evacuation():
+    # control for the test above: same flow, no evacuation -> full hit
+    sch = _sched()
+    r1 = _req(0, "sA")
+    sch.submit(r1)
+    wave = sch.form_wave(0.0)
+    r1.out = [1, 2]
+    sch.complete(wave, now=1.0)
+    r2 = _req(1, "sA")
+    sch.submit(r2)
+    wave2 = sch.form_wave(2.0)
+    assert wave2[0][1]._attached == 3
+    assert sch.stats.prefix_hits_full == 1
+    assert sch.prefill_rows_saved() == pytest.approx(3 * 2 / 8)
+
+
+def test_evacuate_all_homes():
+    sch = _sched()
+    for i, s in enumerate(["sA", "sB"]):
+        sch.submit(_req(i, s))
+    wave = sch.form_wave(0.0)
+    assert len(wave) == 2
+    total = sum(len(sch.pool_keys(h)) for h in sch.homes)
+    assert total == 6
+    rec = ft.evacuate_home(sch)                  # home=None: every home
+    assert rec["pages_dropped"] == 6
+    for _, r in wave:
+        r.out = [1]
+    sch.complete(wave, now=1.0)                  # tolerated, no refs left
+    assert all(not sch.pool_keys(h) for h in sch.homes)
