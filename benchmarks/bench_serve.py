@@ -46,6 +46,8 @@ import jax
 
 from repro.configs import get_config, reduce_config
 from repro.models.model import LM
+from repro.obs import NULL_TRACER, Tracer
+from repro.obs import metrics as obs_metrics
 from repro.runtime.server import DecodeServer, Request
 
 
@@ -114,6 +116,11 @@ def main(argv=None):
     ap.add_argument("--reps", type=int, default=3,
                     help="serve the stream N times, report best wall clock "
                     "(scheduling is deterministic — every rep is identical)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="also run ONE extra untimed traced rep per "
+                    "policy x stream, streaming a JSONL trace here — the "
+                    "timed reps keep the NullTracer, so numbers are "
+                    "unaffected")
     args = ap.parse_args(argv)
 
     pods = args.pods
@@ -122,6 +129,8 @@ def main(argv=None):
     params = model.init(jax.random.key(0))
     plan = build_plan(pods, args.slots, args.max_len, cfg)
     tag = mesh_tag(pods, len(jax.devices()))
+    tracer = (Tracer(args.trace, tool="bench_serve", tag=tag)
+              if args.trace else None)
 
     print("name,us_per_call,derived")
     streams = (("", make_stream), ("_prefix", make_prefix_stream))
@@ -161,23 +170,28 @@ def main(argv=None):
             stats[lbl][policy] = s
             rows_saved[lbl][policy] = srv.scheduler.prefill_rows_saved()
             name = f"serve_{policy}_{tag}{lbl}"
-            tok_s = s.tokens_out / (wall_us / 1e6)
-            print(f"{name},{wall_us / max(1, s.tokens_out):.0f},"
-                  f"tok_s={tok_s:.0f};served={s.served};"
-                  f"tokens={s.tokens_out};steps={s.steps:.0f};"
-                  f"waves={s.waves};"
-                  f"util={srv.scheduler.utilisation():.3f};"
-                  f"pages={s.pages_attached};"
-                  f"hits_full={s.prefix_hits_full};"
-                  f"hits_part={s.prefix_hits_partial};"
-                  f"rows_saved={rows_saved[lbl][policy]:.1f}")
-            print(f"{name}_wait,,"
-                  f"p50={s.wait_pct(50):.1f};p99={s.wait_pct(99):.1f}")
-            print(f"{name}_relayout,,"
-                  f"total={s.relayout_bytes};inter_pod={s.inter_pod_bytes};"
-                  f"intra_pod={s.intra_pod_bytes};"
-                  f"events={s.relayout_events};"
-                  f"affinity_hits={s.affinity_hits}")
+            # ONE rendering path: these are the same numbers the launcher
+            # prints and the trace's sched.summary event carries
+            for row in obs_metrics.bench_rows(
+                    name, srv.scheduler.summary(), wall_us):
+                print(row)
+            if tracer is not None:
+                # one extra UNTIMED rep with the live tracer: identical
+                # deterministic schedule, so the trace describes exactly
+                # the run the rows above measured
+                srv.scheduler = make_scheduler(
+                    policy, n_slots=srv.B, locale=srv.locale, cfg=cfg,
+                    prompt_pad=args.prompt_pad, tracer=tracer, **page_kw)
+                srv.tracer = srv.store.tracer = tracer
+                srv.store.clear()
+                for r in mk(cfg, args.requests, args.slots,
+                            args.prompt_pad, args.sessions,
+                            args.short_new, args.long_new, args.seed):
+                    r.out, r.done, r.home = [], False, None
+                    srv.submit(r)
+                srv.run()
+                srv.scheduler.emit_summary()
+                srv.tracer = srv.store.tracer = NULL_TRACER
     for lbl, _ in streams:
         o, st = outs[lbl], stats[lbl]
         identical = o["fifo"] == o["homed"]
@@ -187,6 +201,8 @@ def main(argv=None):
               f"relayout_homed_lt_fifo={fewer};"
               f"steps_homed_le_fifo={no_slower};"
               f"rows_saved_homed={rows_saved[lbl]['homed']:.1f}")
+    if tracer is not None:
+        tracer.close()
 
 
 if __name__ == "__main__":

@@ -10,7 +10,11 @@
 # lattice — now including the paged (page_capacity > 0) and continuous-
 # refill configs, so I8 (page refcounts never leak) is part of the
 # certificate — and the R10/R11 (HBM live-range, collective control
-# flow) checks on every lowered workload.  A dedicated step then proves
+# flow) checks on every lowered workload.  A traced ``--smoke`` serve then
+# runs with ``--trace`` and `launch/tracelog.py --validate` replays it,
+# proving the observability counter identities (trace schema, charged
+# bytes == scheduler stats == summary, pool refcounts balance, every
+# off-home decode paid for).  A dedicated step then proves
 # the certificate has teeth: every committed scheduler mutant (including
 # `leak_page`, which drops a page-refcount release) must be *refuted*
 # with a minimal witness tagged with its invariant — an R9 that stopped
@@ -36,6 +40,16 @@ python -m repro.launch.homecheck --workload all --pods 1x8 \
 echo "== ci_gate: homecheck --workload all --rules all (hier 2x2x2) =="
 python -m repro.launch.homecheck --workload all --pods 2x2x2 \
     --policy all --rules all || verdict=fail
+
+echo "== ci_gate: traced smoke serve + trace reconciliation =="
+TRACE="$(mktemp -t ci_trace.XXXXXX.jsonl)"
+python -m repro.launch.serve --policy homed --smoke --trace "$TRACE" \
+    > /dev/null || verdict=fail
+# the validator replays the trace and proves every counter identity
+# (charges == stats == summary bytes, pool refs balance, off-home decodes
+# all paid for) — a broken instrumentation layer fails the gate here
+python -m repro.launch.tracelog "$TRACE" --validate || verdict=fail
+rm -f "$TRACE"
 
 echo "== ci_gate: R9 mutant refutation (every committed mutant witnessed) =="
 python - <<'EOF' || verdict=fail

@@ -39,6 +39,11 @@ additionally gated on its *derived* fields: a ``tok_s`` drop beyond
 baseline with ``rows_saved > 0`` whose candidate stops attaching pages
 (``rows_saved == 0``) fails outright — losing prefix reuse is a
 regression even at equal wall-clock.
+
+The ``_wait`` rows (p50/p99 admission wait in deterministic wave-step
+units) are gated with the same ``--fail-above`` threshold: a scheduling
+change that makes requests queue longer fails even when the wall clock
+is unchanged.
 """
 from __future__ import annotations
 
@@ -117,6 +122,34 @@ def prefix_regressions(base: Dict[str, Dict[str, float]],
     return bad
 
 
+def wait_regressions(base: Dict[str, Dict[str, float]],
+                     new: Dict[str, Dict[str, float]],
+                     fail_above: float = None) -> List[str]:
+    """Latency gate for the ``_wait`` serving rows: a p50/p99 admission-
+    wait increase beyond `fail_above` percent fails (wave-step units are
+    deterministic, so this is a pure scheduling regression, invisible to
+    the wall-clock gate).  A baseline of 0 only gates going nonzero."""
+    if fail_above is None:
+        return []
+    bad = []
+    for name in sorted(base.keys() & new.keys()):
+        if not name.endswith("_wait"):
+            continue
+        b, n = base[name], new[name]
+        for key in ("p50", "p99"):
+            if key not in b or key not in n:
+                continue
+            if b[key] > 0:
+                rise = (n[key] - b[key]) / b[key] * 100.0
+                if rise > fail_above:
+                    bad.append(f"{name}: {key} {b[key]:.1f} -> {n[key]:.1f} "
+                               f"({rise:+.1f}%)")
+            elif n[key] > 0:
+                bad.append(f"{name}: {key} 0 -> {n[key]:.1f} "
+                           f"(waits appeared)")
+    return bad
+
+
 def compare(base: Dict[str, float], new: Dict[str, float]) -> List[Dict]:
     """Per-case rows, sorted worst regression first."""
     rows = []
@@ -159,13 +192,20 @@ def main(argv=None) -> int:
             print(f"# FAIL: {len(dirty)} previously {key}-{ok} case(s) "
                   f"regressed", file=sys.stderr)
             rc = 1
-    prefix_bad = prefix_regressions(load_derived(args.base),
-                                    load_derived(args.new),
+    base_d, new_d = load_derived(args.base), load_derived(args.new)
+    prefix_bad = prefix_regressions(base_d, new_d,
                                     fail_above=args.fail_above)
     for msg in prefix_bad:
         print(f"# prefix-regression: {msg}", file=sys.stderr)
     if prefix_bad:
         print(f"# FAIL: {len(prefix_bad)} _prefix-family derived "
+              f"regression(s)", file=sys.stderr)
+        rc = 1
+    wait_bad = wait_regressions(base_d, new_d, fail_above=args.fail_above)
+    for msg in wait_bad:
+        print(f"# wait-regression: {msg}", file=sys.stderr)
+    if wait_bad:
+        print(f"# FAIL: {len(wait_bad)} _wait-family latency "
               f"regression(s)", file=sys.stderr)
         rc = 1
     if not rows:

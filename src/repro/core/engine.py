@@ -80,6 +80,8 @@ kernel; its merge tree is always the reference form.
 """
 from __future__ import annotations
 
+import functools
+import itertools
 import math
 from dataclasses import dataclass
 from functools import partial
@@ -98,6 +100,10 @@ from repro.core.sort import (check_pad_outside_trace, merge_sorted,
                              pad_to_multiple)
 from repro.kernels.local_sort import local_sort as _local_sort_kernel
 from repro.kernels.merge_split import merge_split as _merge_split_kernel
+from repro.obs.tracelog import get_tracer
+
+#: engine.sort span ids — groups a span's engine.exchange_level events
+_SORT_CALLS = itertools.count(1)
 
 AXIS = "data"
 
@@ -698,4 +704,36 @@ def make_engine_fn(mesh: Optional[Mesh], policy: LocalisationPolicy,
     fn = partial(shard_map_sort, mesh=mesh, policy=policy,
                  num_workers=num_workers, local_sort=local_sort,
                  interpret=interpret, axis=axis, local_phase=local_phase)
-    return sort_entry(jax.jit(fn, donate_argnums=(0,)), granule)
+    entry = sort_entry(jax.jit(fn, donate_argnums=(0,)), granule)
+    sizes = _axes_sizes(mesh, axes)
+
+    @functools.wraps(entry)
+    def traced(x, *a, **kw):
+        tr = get_tracer()
+        if not tr.enabled:
+            return entry(x, *a, **kw)
+        x = jnp.asarray(x)
+        n = int(x.shape[0])
+        itemsize = jnp.dtype(x.dtype).itemsize
+        cid = next(_SORT_CALLS)
+        # the span stamps everything the reconciler needs to recompute
+        # exchange_schedule(n, sizes, policy) and check the stamped
+        # per-level budgets against it — the trace carries the analytic
+        # byte budget right next to the scheduler's observed charges
+        with tr.span("engine.sort", cat="engine", call=cid, n=n,
+                     sizes=list(sizes), num_workers=num_workers,
+                     itemsize=itemsize, local_phase=local_phase,
+                     policy={"localised": policy.localised,
+                             "static_mapping": policy.static_mapping,
+                             "homing": policy.homing.name,
+                             "outer": policy.outer}) as sp:
+            for lr in exchange_schedule(n, sizes, policy,
+                                        num_workers=num_workers,
+                                        itemsize=itemsize,
+                                        local_phase=local_phase):
+                sp.event("engine.exchange_level", call=cid, **lr)
+            return entry(x, *a, **kw)
+
+    traced.lower = entry.lower
+    traced.__wrapped__ = entry.__wrapped__
+    return traced

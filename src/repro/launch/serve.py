@@ -11,6 +11,11 @@ mesh (run under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)
 so the scheduler's inter-pod vs intra-pod relayout split is visible on a
 laptop.  The per-home admission summary prints at exit either way — the
 launcher demonstrates the scheduler without reading code.
+
+``--trace PATH`` streams a structured JSONL trace of the whole run
+(scheduler decisions, charges, pool pins, per-wave decode spans) —
+validate its counter identities with ``python -m repro.launch.tracelog
+PATH --validate`` or export it for Perfetto with ``--chrome``.
 """
 from __future__ import annotations
 
@@ -24,6 +29,8 @@ from repro.checkpoint import latest_step, restore
 from repro.configs import get_config, reduce_config
 from repro.configs.base import ShapeSpec
 from repro.models.model import LM
+from repro.obs import Tracer, set_tracer
+from repro.obs import metrics as obs_metrics
 from repro.runtime.server import DecodeServer, Request
 
 
@@ -70,7 +77,18 @@ def main(argv=None):
     ap.add_argument("--prompt-pad", type=int, default=16,
                     help="fixed prefill pad bucket (wave-composition-"
                     "independent numerics); 0 = per-wave max")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="stream a structured JSONL trace here (validate "
+                    "with `python -m repro.launch.tracelog PATH --validate`)")
+    ap.add_argument("--json", action="store_true",
+                    help="also print the summary as one JSON line (same "
+                    "dict the human report and bench rows render)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: 8 requests, 4 slots, max-new 4 "
+                    "(the traced smoke the gate validates)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests, args.slots, args.max_new = 8, 4, 4
 
     cfg = reduce_config(get_config(args.arch), layers=4)
     model = LM(cfg)
@@ -79,9 +97,15 @@ def main(argv=None):
         params = restore(args.ckpt, latest_step(args.ckpt),
                          {"params": params})["params"]
     plan = build_plan(args.pods, args.slots, 96, cfg)
+    tracer = None
+    if args.trace:
+        tracer = Tracer(args.trace, tool="launch.serve", arch=args.arch,
+                        policy=args.policy, slots=args.slots,
+                        pods=args.pods, requests=args.requests)
+        set_tracer(tracer)     # engine-level spans join the same stream
     srv = DecodeServer(cfg, params, batch_slots=args.slots, max_len=96,
                        plan=plan, scheduler=args.policy,
-                       prompt_pad=args.prompt_pad or None)
+                       prompt_pad=args.prompt_pad or None, tracer=tracer)
     rng = np.random.RandomState(0)
     for rid in range(args.requests):
         plen = rng.randint(2, 9)
@@ -94,7 +118,17 @@ def main(argv=None):
     for r in sorted(srv.run(), key=lambda r: r.rid):
         print(f"req {r.rid} (session {r.session}, home {r.home}, "
               f"wait {r.wait:.0f}): -> {r.out}")
-    print(srv.scheduler.format_summary())
+    # one code path: the trace's sched.summary event, the human report
+    # and the optional JSON line all render the same canonical dict
+    summary = srv.scheduler.emit_summary()
+    print(obs_metrics.format_summary(summary))
+    if args.json:
+        import json
+        print(json.dumps(summary))
+    if tracer is not None:
+        tracer.close()
+        set_tracer(None)
+        print(f"# trace: {args.trace} ({len(tracer.records())} records)")
 
 
 if __name__ == "__main__":

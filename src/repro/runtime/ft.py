@@ -16,6 +16,8 @@ import time
 from dataclasses import dataclass
 from typing import List, Optional
 
+from repro.obs import NULL_TRACER
+
 
 def evacuate_home(scheduler, home: Optional[int] = None,
                   store=None) -> dict:
@@ -39,8 +41,11 @@ def evacuate_home(scheduler, home: Optional[int] = None,
         homes = scheduler.homes if home is None else [home]
         for h in homes:
             pruned += store.prune(h, scheduler.pool_keys(h))
-    return {"home": home, "pages_dropped": dropped,
-            "content_pruned": pruned}
+    rec = {"home": home, "pages_dropped": dropped,
+           "content_pruned": pruned}
+    getattr(scheduler, "tracer", NULL_TRACER).event(
+        "ft.evacuate", cat="ft", **rec)
+    return rec
 
 
 @dataclass
@@ -49,6 +54,7 @@ class Supervisor:
     max_restarts: int = 3
     heartbeat_timeout_s: float = 300.0   # no stdout for this long == hung
     env: Optional[dict] = None
+    tracer: object = None                # repro.obs tracer; None == off
 
     def run(self) -> dict:
         """Supervise to completion; always returns a structured record.
@@ -68,6 +74,7 @@ class Supervisor:
         restart budget but never poison a subsequent clean exit — the
         kill -9 -> relaunch -> resume path is the designed recovery.
         """
+        tr = self.tracer if self.tracer is not None else NULL_TRACER
         restarts = 0
         hangs = 0
         history = []
@@ -92,14 +99,21 @@ class Supervisor:
                     break
             rc = proc.wait()
             hangs += int(hung)
-            history.append({"rc": rc, "hung": hung,
-                            "seconds": round(time.time() - t0, 1),
-                            "lines": len(lines)})
+            attempt = {"rc": rc, "hung": hung,
+                       "seconds": round(time.time() - t0, 1),
+                       "lines": len(lines)}
+            history.append(attempt)
+            tr.event("ft.attempt", cat="ft", attempt=len(history),
+                     **attempt)
 
             def result(ok: bool, reason: str) -> dict:
-                return {"ok": ok, "reason": reason, "restarts": restarts,
-                        "hangs": hangs, "final_rc": rc,
-                        "history": history, "stdout": lines}
+                rec = {"ok": ok, "reason": reason, "restarts": restarts,
+                       "hangs": hangs, "final_rc": rc,
+                       "history": history, "stdout": lines}
+                tr.event("ft.result", cat="ft", ok=ok, reason=reason,
+                         restarts=restarts, hangs=hangs, final_rc=rc,
+                         attempts=len(history))
+                return rec
 
             if rc == 0 and not hung:
                 if hangs >= self.max_restarts:

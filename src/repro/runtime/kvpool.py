@@ -151,10 +151,14 @@ class PageStore:
     key set after every scheduler transition, so eviction/invalidate in
     the accounting layer frees the bytes here."""
 
-    def __init__(self):
+    def __init__(self, tracer=None):
+        from repro.obs import NULL_TRACER     # local: keep module zero-dep
         self._data: Dict[int, Dict[object, object]] = {}
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     def put(self, home: int, key: object, content) -> None:
+        if self.tracer.enabled and not self.has(home, key):
+            self.tracer.count("store.pages", 1, cat="pool", home=home)
         self._data.setdefault(home, {})[key] = content
 
     def get(self, home: int, key: object):
@@ -170,6 +174,9 @@ class PageStore:
         dead = [k for k in tbl if k not in live]
         for k in dead:
             del tbl[k]
+        if dead and self.tracer.enabled:
+            self.tracer.count("store.pages", -len(dead), cat="pool",
+                              home=home)
         return len(dead)
 
     def clear(self) -> None:

@@ -71,6 +71,8 @@ from typing import (Dict, FrozenSet, List, NamedTuple, Optional, Sequence,
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
+from repro.obs import metrics as obs_metrics
 from repro.runtime import kvpool
 from repro.runtime.kvpool import Page
 
@@ -258,6 +260,11 @@ def _bindings_dict(state: SchedState) -> Dict[object, Binding]:
 
 def _pools_dict(state: SchedState) -> Dict[int, Tuple[Page, ...]]:
     return {h: p for h, p in state.pools}
+
+
+def _pool_refs(state: SchedState) -> Dict[int, int]:
+    """Per-home live page refcounts — the traced pool-identity quantity."""
+    return {h: sum(pg.refs for pg in p) for h, p in state.pools}
 
 
 def _pack(queues: Dict[int, List[QEntry]], fifo: List[ReqInfo],
@@ -646,7 +653,8 @@ class Scheduler:
                  session_capacity: Optional[int] = None,
                  affinity_slack: Optional[int] = None,
                  prompt_pad: Optional[int] = None,
-                 page_size: int = 0, page_capacity: int = 0):
+                 page_size: int = 0, page_capacity: int = 0,
+                 tracer=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; want one of "
                              f"{POLICIES}")
@@ -672,6 +680,8 @@ class Scheduler:
             page_capacity=page_capacity)
         self.prompt_pad = prompt_pad     # the server's fixed prefill bucket
         self.page_size = page_size       # tokens per pooled KV page
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = obs_metrics.MetricsRegistry()
         self.state = initial_state(self.cfg)
         self._future: List[Tuple[float, int, object]] = []   # arrival heap
         self._seq = 0
@@ -728,9 +738,16 @@ class Scheduler:
                            session=req.session, blocks=blocks)
             req._sched_blocks = blocks
             self._reqs[uid] = req
+            pre_b = self.state.binding(req.session)
             self.state, home = route_t(self.cfg, self.state, info)
             if home >= 0:
                 req.home = home
+            if self.tracer.enabled:
+                self.tracer.event(
+                    "sched.route", cat="sched", rid=uid,
+                    session=req.session, home=home, now=now,
+                    span=info.span, blocks=len(blocks),
+                    affinity=(pre_b is not None and home == pre_b.home))
 
     # ------------------------------------------------------------ formation
     def form_wave(self, now: float,
@@ -744,46 +761,81 @@ class Scheduler:
         the home that owns its slot; the caller serves the wave and then
         reports it back via `complete`.
         """
-        self._admit(now)
-        pre_homes = {b.session: b.home for b in self.state.bindings}
-        self.state, placements, charges = form_wave_t(
-            self.cfg, self.state, free=free_slots, now=now)
-        for c in charges.moves:
-            if c.nbytes:
-                self.stats.relayout_bytes += c.nbytes
-                self.stats.relayout_events += 1
-                self.stats.homes[c.dst].relayout_bytes += c.nbytes
-                if c.inter_pod:
-                    self.stats.inter_pod_bytes += c.nbytes
-                else:
-                    self.stats.intra_pod_bytes += c.nbytes
-        wave = []
-        for p in placements:
-            req = self._reqs.pop(p.rid)
-            req.home = p.home
-            req._sched_uid = p.rid          # complete() keys forked by it
-            req._attached = p.attached      # pages the server may attach
-            nblk = len(getattr(req, "_sched_blocks", ()))
-            if p.attached:
-                self.stats.pages_attached += p.attached
-                if p.attached == nblk:
-                    self.stats.prefix_hits_full += 1
-                else:
-                    self.stats.prefix_hits_partial += 1
-            if p.spilled_from is not None:
-                self.stats.homes[p.spilled_from].spilled_out += 1
-                self.stats.homes[p.home].spilled_in += 1
-            elif (self.cfg.policy == "homed"
-                  and pre_homes.get(req.session) == p.home):
-                self.stats.affinity_hits += 1
-            wave.append((p.slot, req))
-        wave.sort(key=lambda sr: sr[0])
-        if wave:
-            self.stats.waves += 1
-        for _slot, req in wave:
-            req.wait = now - float(getattr(req, "t_arrive", 0.0))
-            self.stats.waits.append(req.wait)
-            self.stats.homes[req.home].admitted += 1
+        tr = self.tracer
+        with tr.span("sched.form_wave", cat="sched", now=now,
+                     free=(len(free_slots) if free_slots is not None
+                           else self.n_slots)) as sp:
+            self._admit(now)
+            pre_homes = {b.session: b.home for b in self.state.bindings}
+            pre_refs = _pool_refs(self.state)
+            self.state, placements, charges = form_wave_t(
+                self.cfg, self.state, free=free_slots, now=now)
+            # the wave id the events carry: stats.waves is bumped below
+            # only for non-empty waves, so this is the id it will get
+            wid = self.stats.waves + (1 if placements else 0)
+            charged = 0
+            for c in charges.moves:
+                if c.nbytes:
+                    self.stats.relayout_bytes += c.nbytes
+                    self.stats.relayout_events += 1
+                    self.stats.homes[c.dst].relayout_bytes += c.nbytes
+                    if c.inter_pod:
+                        self.stats.inter_pod_bytes += c.nbytes
+                    else:
+                        self.stats.intra_pod_bytes += c.nbytes
+                charged += c.nbytes
+                tr.event("sched.charge", cat="sched", wave=wid, rid=c.rid,
+                         session=c.session, src=c.src, dst=c.dst,
+                         tokens=c.tokens, nbytes=c.nbytes,
+                         inter_pod=c.inter_pod, migrate=c.migrate)
+            # pool refs the wave's attaches pinned (reconcile identity:
+            # acquires - releases - invalidations == live refs)
+            for h, refs in _pool_refs(self.state).items():
+                if refs - pre_refs.get(h, 0) > 0:
+                    tr.event("pool.acquire", cat="pool", wave=wid, home=h,
+                             refs=refs - pre_refs.get(h, 0))
+            wave = []
+            for p in placements:
+                req = self._reqs.pop(p.rid)
+                req.home = p.home
+                req._sched_uid = p.rid      # complete() keys forked by it
+                req._attached = p.attached  # pages the server may attach
+                nblk = len(getattr(req, "_sched_blocks", ()))
+                if p.attached:
+                    self.stats.pages_attached += p.attached
+                    if p.attached == nblk:
+                        self.stats.prefix_hits_full += 1
+                    else:
+                        self.stats.prefix_hits_partial += 1
+                if p.spilled_from is not None:
+                    self.stats.homes[p.spilled_from].spilled_out += 1
+                    self.stats.homes[p.home].spilled_in += 1
+                elif (self.cfg.policy == "homed"
+                      and pre_homes.get(req.session) == p.home):
+                    self.stats.affinity_hits += 1
+                # decision order matters: the reconciler replays the
+                # same-wave cache-copy sites from this event sequence
+                tr.event("sched.place", cat="sched", wave=wid, rid=p.rid,
+                         slot=p.slot, home=p.home, session=req.session,
+                         spilled_from=p.spilled_from, attached=p.attached,
+                         blocks=nblk, bound_home=pre_homes.get(req.session),
+                         wait=now - float(getattr(req, "t_arrive", 0.0)))
+                wave.append((p.slot, req))
+            wave.sort(key=lambda sr: sr[0])
+            if wave:
+                self.stats.waves += 1
+            waits = []
+            for _slot, req in wave:
+                req.wait = now - float(getattr(req, "t_arrive", 0.0))
+                self.stats.waits.append(req.wait)
+                waits.append(req.wait)
+                self.stats.homes[req.home].admitted += 1
+            sp.set(wave=wid, target=charges.target, floor=charges.floor,
+                   placed=len(placements), charged_bytes=charged)
+            if wave:
+                self.metrics.record_wave(
+                    self.cfg, self.state, wid, now, charges.target,
+                    placements, waits, self.utilisation(), tracer=tr)
         return wave
 
     # ------------------------------------------------------------ completion
@@ -801,18 +853,33 @@ class Scheduler:
         requests as their slots drain (possibly a subset of a wave)."""
         if steps:
             self.tick(steps)
-        served = []
-        for _slot, req in placements:
-            self.stats.served += 1
-            self.stats.tokens_out += len(req.out)
-            self.stats.busy_slot_steps += len(req.prompt) + len(req.out)
-            served.append(Served(
-                rid=getattr(req, "_sched_uid", id(req)), session=req.session,
-                home=req.home, tokens=len(req.prompt) + len(req.out),
-                blocks=getattr(req, "_sched_blocks", ())))
-        self.state, evicted = complete_t(self.cfg, self.state, served, now)
-        for b in evicted:
-            self.stats.homes[b.home].evicted += 1
+        tr = self.tracer
+        with tr.span("sched.complete", cat="sched", now=now,
+                     served=len(placements)) as sp:
+            served = []
+            for _slot, req in placements:
+                self.stats.served += 1
+                self.stats.tokens_out += len(req.out)
+                self.stats.busy_slot_steps += len(req.prompt) + len(req.out)
+                served.append(Served(
+                    rid=getattr(req, "_sched_uid", id(req)),
+                    session=req.session,
+                    home=req.home, tokens=len(req.prompt) + len(req.out),
+                    blocks=getattr(req, "_sched_blocks", ())))
+            pre_refs = _pool_refs(self.state)
+            self.state, evicted = complete_t(self.cfg, self.state, served,
+                                             now)
+            for b in evicted:
+                self.stats.homes[b.home].evicted += 1
+                tr.event("sched.evict", cat="sched", session=b.session,
+                         home=b.home, now=now)
+            post_refs = _pool_refs(self.state)
+            for h, refs in pre_refs.items():
+                dropped = refs - post_refs.get(h, 0)
+                if dropped > 0:
+                    tr.event("pool.release", cat="pool", home=h,
+                             refs=dropped, now=now)
+            sp.set(evicted=len(evicted))
 
     # ------------------------------------------------------------ page pool
     def pool_keys(self, home: int) -> List[object]:
@@ -831,7 +898,12 @@ class Scheduler:
         for h in list(pools):
             if home is not None and h != home:
                 continue
-            dropped += len(pools[h])
+            npages = len(pools[h])
+            if npages:
+                self.tracer.event(
+                    "pool.invalidate", cat="pool", home=h, pages=npages,
+                    refs=sum(pg.refs for pg in pools[h]))
+            dropped += npages
             pools[h] = kvpool.invalidate(pools[h])
         self.state = _pack(_queues_dict(self.state), list(self.state.fifo),
                            _bindings_dict(self.state), self.state.forked,
@@ -857,57 +929,22 @@ class Scheduler:
         return self.stats.pages_attached * self.page_size / self.prompt_pad
 
     def summary(self) -> Dict:
-        s = self.stats
-        return {
-            "policy": self.policy,
-            "n_slots": self.n_slots,
-            "n_homes": len(self.homes),
-            "served": s.served,
-            "tokens_out": s.tokens_out,
-            "waves": s.waves,
-            "steps": s.steps,
-            "utilisation": round(self.utilisation(), 4),
-            "wait_p50": s.wait_pct(50.0),
-            "wait_p99": s.wait_pct(99.0),
-            "relayout_bytes": s.relayout_bytes,
-            "inter_pod_bytes": s.inter_pod_bytes,
-            "intra_pod_bytes": s.intra_pod_bytes,
-            "relayout_events": s.relayout_events,
-            "affinity_hits": s.affinity_hits,
-            "pages_attached": s.pages_attached,
-            "prefix_hits_full": s.prefix_hits_full,
-            "prefix_hits_partial": s.prefix_hits_partial,
-            "prefill_rows_saved": round(self.prefill_rows_saved(), 2),
-            "per_home": {h: vars(hs).copy() for h, hs in s.homes.items()},
-        }
+        """The canonical summary dict (see `repro.obs.metrics.summarise`).
+        One rendering path: the launcher's human report, bench_serve's CSV
+        rows and the trace's ``sched.summary`` event all read this dict."""
+        return obs_metrics.summarise(self)
 
     def format_summary(self) -> str:
         """The launcher's exit report: one line per home, then totals."""
-        s = self.stats
-        lines = [f"# scheduler policy={self.policy} slots={self.n_slots} "
-                 f"homes={len(self.homes)}"
-                 + (f" homes_per_pod={self.homes_per_pod}"
-                    if self.homes_per_pod else ""),
-                 "# home  admitted  spill_in  spill_out  evicted  "
-                 "relayout_bytes"]
-        for h in self.homes:
-            hs = s.homes[h]
-            lines.append(f"#  {h:>3} {hs.admitted:>9} {hs.spilled_in:>9} "
-                         f"{hs.spilled_out:>10} {hs.evicted:>8} "
-                         f"{hs.relayout_bytes:>14}")
-        lines.append(
-            f"# served={s.served} tokens={s.tokens_out} waves={s.waves} "
-            f"steps={s.steps:.0f} util={self.utilisation():.2f} "
-            f"wait_p50={s.wait_pct(50):.1f} wait_p99={s.wait_pct(99):.1f} "
-            f"relayout={s.relayout_bytes}B "
-            f"(inter_pod={s.inter_pod_bytes}B intra_pod={s.intra_pod_bytes}B)")
-        if self.cfg.page_capacity:
-            lines.append(
-                f"# pages_attached={s.pages_attached} "
-                f"prefix_hits={s.prefix_hits_full}full/"
-                f"{s.prefix_hits_partial}partial "
-                f"prefill_rows_saved={self.prefill_rows_saved():.1f}")
-        return "\n".join(lines)
+        return obs_metrics.format_summary(self.summary())
+
+    def emit_summary(self) -> Dict:
+        """Emit the final summary into the trace (the reconciliation
+        target) and return it.  A trace may contain several serving runs;
+        each ``sched.summary`` event closes one reconciliation segment."""
+        summary = self.summary()
+        self.tracer.event("sched.summary", cat="sched", **summary)
+        return summary
 
 
 def make_scheduler(policy: str, n_slots: int, locale=None, cfg=None,

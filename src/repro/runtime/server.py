@@ -78,7 +78,8 @@ class DecodeServer:
                  scheduler: Union[str, Scheduler] = "fifo",
                  prompt_pad: Optional[int] = None,
                  page_size: Optional[int] = None,
-                 page_capacity: Optional[int] = None):
+                 page_capacity: Optional[int] = None,
+                 tracer=None):
         assert cfg.embed_input, "server serves token LMs"
         self.cfg, self.params, self.plan = cfg, params, plan
         self.B, self.max_len = batch_slots, max_len
@@ -118,7 +119,8 @@ class DecodeServer:
             scheduler = make_scheduler(
                 scheduler, n_slots=self.B, locale=self.locale, cfg=cfg,
                 prompt_pad=prompt_pad, page_size=ps if self.paged else 0,
-                page_capacity=page_capacity if self.paged else 0)
+                page_capacity=page_capacity if self.paged else 0,
+                tracer=tracer)
         if scheduler.n_slots != self.B:
             raise ValueError(f"scheduler manages {scheduler.n_slots} slots, "
                              f"server has {self.B}")
@@ -127,9 +129,13 @@ class DecodeServer:
                 "a paged KV pool needs prompt_pad and an attention-only, "
                 "non-sliding-window stack")
         self.scheduler = scheduler
+        # the server traces through the scheduler's tracer — one stream,
+        # one sink; a NullTracer keeps every instrumented path free
+        self.tracer = scheduler.tracer
         self.page_size = (scheduler.page_size if scheduler.page_size
                           else (min(4, prompt_pad) if self.paged else 0))
-        self.store = PageStore()     # host-side page content, keyed by home
+        # host-side page content, keyed by home; shares the trace stream
+        self.store = PageStore(tracer=self.tracer)
 
         def _step(p, c, b, pos):
             logits, c2 = self.model.decode_step(p, c, b, pos, plan)
@@ -258,7 +264,10 @@ class DecodeServer:
             wave = sch.form_wave(now)
             if not wave:          # future arrivals only — jump, then retry
                 continue
-            reqs, cost = self._serve_wave(wave)
+            with self.tracer.span("serve.wave", cat="serve", now=now,
+                                  placed=len(wave)) as sp:
+                reqs, cost = self._serve_wave(wave)
+                sp.set(cost=cost)
             sch.complete(wave, now, cost)
             now += cost
             served += reqs
@@ -298,6 +307,12 @@ class DecodeServer:
                    and self.store.has(r.home, blocks[s][n])):
                 n += 1
             att[s] = n
+        if self.tracer.enabled:
+            aps = sum(att.values())
+            self.tracer.event(
+                "serve.attach", cat="serve", now=now, pages=aps,
+                per_slot={s: att[s] for s, _ in wave},
+                rows_saved=round(aps * ps / self.prompt_pad, 2))
 
         # 1. attach pooled page levels (no compute, no cost)
         max_att = max(att.values(), default=0)
@@ -397,8 +412,11 @@ class DecodeServer:
                         caches = self.locale.pin_tree(
                             self.model.init_cache(B, self.max_len),
                             dim=1, size=B)
-                    caches, cost = self._refill(wave, slots, caches,
-                                                pos_np, cur_np, now)
+                    with self.tracer.span("serve.refill", cat="serve",
+                                          now=now, placed=len(wave)) as sp:
+                        caches, cost = self._refill(wave, slots, caches,
+                                                    pos_np, cur_np, now)
+                        sp.set(cost=cost)
                     sch.tick(cost)
                     now += cost
                 elif not occupied:
@@ -406,8 +424,17 @@ class DecodeServer:
             if not any(r is not None for r in slots):
                 continue
             batch = {"tokens": jnp.asarray(cur_np[:, None])}
-            logits, caches = self._decode(self.params, caches, batch,
-                                          jnp.asarray(pos_np))
+            if self.tracer.enabled:
+                act = [s for s, r in enumerate(slots) if r is not None]
+                dspan = self.tracer.span(
+                    "serve.decode", cat="serve", now=now, active=len(act),
+                    pos_min=int(pos_np[act].min()),
+                    pos_max=int(pos_np[act].max()))
+            else:
+                dspan = self.tracer.span("serve.decode")
+            with dspan:
+                logits, caches = self._decode(self.params, caches, batch,
+                                              jnp.asarray(pos_np))
             cur_np = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
             pos_np = pos_np + 1
             sch.tick(1.0)
